@@ -1,0 +1,451 @@
+"""Benchmark harness — one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only <name>] [--fast]``
+
+Prints ``name,us_per_call,derived`` CSV rows; each benchmark reproduces one
+of the paper's quantitative artifacts and reports the headline ratio it
+claims, next to the paper's value:
+
+  fig2_traffic_volume      traffic share by parallelism (Fig 2)
+  fig3_timeline            per-phase forward timings (Fig 3/17)
+  fig10_testbed            end-to-end iteration, MixNet vs EPS (Fig 10)
+  fig11_cost               networking cost vs cluster size (Fig 11)
+  fig12_speedups           training iteration time across fabrics (Fig 12)
+  fig13_pareto             cost-efficiency ratios (Fig 13)
+  fig14_failures           NIC / GPU / node failure overheads (Fig 14)
+  fig16_nvl72              high-radix scale-up comparison (Fig 16)
+  fig19_copilot            COPILOT prediction accuracy (Fig 19)
+  fig21_reconfig_delay     reconfiguration turnaround profile (Fig 21)
+  fig26_scalability        cluster-size scaling (Fig 26)
+  fig27_optical_degree     optical degree sweep (Fig 27)
+  fig28_reconfig_latency   reconfiguration latency sweep (Fig 28)
+  kernels                  Pallas-kernel oracle timings (framework table)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _timeit(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig2_traffic_volume(fast=False):
+    """Fig 2: traffic volume by parallelism for the paper's models."""
+    from repro.configs.paper_models import SIM_MODELS
+
+    for name, m in SIM_MODELS.items():
+        a2a = 4 * m.num_blocks * m.a2a_bytes_total() * m.num_microbatches
+        tp = (
+            4 * m.num_blocks * m.tokens_per_microbatch * m.d_model * 2
+            * m.num_microbatches * (m.tp_degree - 1)
+        )
+        pp = 2 * m.pp_degree * m.tokens_per_microbatch * m.d_model * 2 * m.num_microbatches
+        dp = m.param_count() * 2
+        total = a2a + tp + pp + dp
+        _row(
+            f"fig2_traffic_volume/{name}", 0.0,
+            f"EP%={a2a/total*100:.0f} TP%={tp/total*100:.0f} "
+            f"PP%={pp/total*100:.0f} DP%={dp/total*100:.0f}",
+        )
+
+
+def fig3_timeline(fast=False):
+    """Fig 3/17: per-phase forward times; the expert phase must leave a
+    window larger than the 25 ms OCS reconfiguration."""
+    from repro.configs.paper_models import SIM_MODELS
+
+    for name, m in SIM_MODELS.items():
+        attn = m.attention_time() * 1e3
+        exp = m.expert_time() * 1e3
+        _row(
+            f"fig3_timeline/{name}", 0.0,
+            f"attn_ms={attn:.1f} expert_ms={exp:.1f} "
+            f"hides_25ms_ocs={exp + attn > 25.0}",
+        )
+
+
+def fig10_testbed(fast=False):
+    """Fig 10: end-to-end iteration time of a (reduced) Mixtral-8x7B-family
+    model trained with the mixnet dispatch path vs the einsum baseline —
+    the CPU-scale analogue of the 32-GPU prototype comparison."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs.paper_models import MIXTRAL_8X7B_CONFIG
+    from repro.data.pipeline import SyntheticLM
+    from repro.models.config import reduced
+    from repro.optim.adamw import AdamWConfig
+    from repro.parallel.sharding import make_plan
+    from repro.train.train_step import init_all, make_train_step
+
+    plan = make_plan(None)
+    cfg = reduced(MIXTRAL_8X7B_CONFIG, d_model=128, d_ff=256, num_layers=4)
+    data = SyntheticLM(cfg.vocab_size, 64, 4, seed=0)
+    for backend in ("mixnet", "einsum"):
+        c = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, backend=backend)
+        )
+        opt = AdamWConfig(lr=1e-3)
+        params, _, opt_state = init_all(jax.random.PRNGKey(0), c, plan, opt)
+        step = jax.jit(make_train_step(c, plan, opt))
+        b = next(data)
+        batch = {"tokens": b.tokens, "labels": b.labels}
+        us = _timeit(lambda: jax.block_until_ready(step(params, opt_state, batch)[2]["loss"]))
+        _row(f"fig10_testbed/{backend}", us, f"iter_ms={us/1e3:.1f}")
+
+
+def fig11_cost(fast=False):
+    from repro.core import cost as costm
+
+    for servers in (16, 128, 512) if not fast else (128,):
+        for gbps in (100, 400):
+            cm = costm.fabric_cost("mixnet", servers, gbps)
+            cf = costm.fabric_cost("fat-tree", servers, gbps)
+            cr = costm.fabric_cost("rail-optimized", servers, gbps)
+            ct = costm.fabric_cost("topoopt", servers, gbps)
+            _row(
+                f"fig11_cost/{servers}srv_{gbps}G", 0.0,
+                f"mixnet=${cm/1e6:.2f}M ft_over_mixnet={cf/cm:.2f}x "
+                f"rail_over_mixnet={cr/cm:.2f}x topoopt=${ct/1e6:.2f}M",
+            )
+
+
+def _fabric_iter_times(model, gbps, servers=128, iters=5):
+    from repro.core.fabric import FabricConfig, make_fabric
+    from repro.core.netsim import simulate_training
+
+    out = {}
+    for fname in ("mixnet", "fat-tree", "oversub-fat-tree", "rail-optimized", "topoopt"):
+        fab = make_fabric(fname, FabricConfig(num_servers=servers, link_gbps=gbps))
+        res = simulate_training(
+            model, fab, iterations=iters, use_copilot=(fname == "mixnet")
+        )
+        out[fname] = float(np.mean([r.total for r in res[1:]]))
+    return out
+
+
+def fig12_speedups(fast=False):
+    """Fig 12: iteration time across fabrics; paper: MixNet ~ fat-tree,
+    beats TopoOpt by 1.3-1.5x avg and oversub by up to 1.6x."""
+    from repro.configs.paper_models import SIM_MODELS
+
+    models = list(SIM_MODELS.items())
+    if fast:
+        models = models[:1]
+    for name, m in models:
+        for gbps in (100, 400):
+            t0 = time.perf_counter()
+            times = _fabric_iter_times(m, gbps)
+            us = (time.perf_counter() - t0) * 1e6
+            tm = times["mixnet"]
+            _row(
+                f"fig12_speedups/{name}_{gbps}G", us,
+                f"vs_fat_tree={times['fat-tree']/tm:.2f}x "
+                f"vs_topoopt={times['topoopt']/tm:.2f}x "
+                f"vs_oversub={times['oversub-fat-tree']/tm:.2f}x "
+                f"(paper: ~1.0 / 1.3-1.5 / <=1.6)",
+            )
+
+
+def fig13_pareto(fast=False):
+    """Fig 13: performance-per-dollar; paper: 1.2-1.5x over fat-tree @100G,
+    1.9-2.3x @400G, 1.4-1.5x over rail @100G, 2.3-2.4x @400G."""
+    from repro.configs.paper_models import SIM_MODELS
+    from repro.core import cost as costm
+
+    models = list(SIM_MODELS.items())
+    if fast:
+        models = models[:1]
+    for name, m in models:
+        for gbps in (100, 400):
+            times = _fabric_iter_times(m, gbps)
+            eff = {
+                f: costm.cost_efficiency(t, costm.fabric_cost(f, 128, gbps))
+                for f, t in times.items()
+            }
+            _row(
+                f"fig13_pareto/{name}_{gbps}G", 0.0,
+                f"vs_fat_tree={eff['mixnet']/eff['fat-tree']:.2f}x "
+                f"vs_rail={eff['mixnet']/eff['rail-optimized']:.2f}x "
+                f"(paper@{gbps}G: ft {'1.2-1.5' if gbps==100 else '1.9-2.3'}x, "
+                f"rail {'1.4-1.5' if gbps==100 else '2.3-2.4'}x)",
+            )
+
+
+def fig14_failures(fast=False):
+    """Fig 14: failure resiliency; paper: NIC ~3.3%, GPU ~5.1%, node ~6.5%."""
+    from repro.configs.paper_models import MIXTRAL_8X22B, DEEPSEEK_R1
+    from repro.core.fabric import FabricConfig, make_fabric
+    from repro.core.netsim import simulate_training
+
+    for name, model in (("mixtral-8x22b", MIXTRAL_8X22B), ("deepseek-r1", DEEPSEEK_R1)):
+        cfg = FabricConfig(num_servers=128, link_gbps=400)
+        fab = make_fabric("mixnet", cfg)
+        base = np.mean([r.total for r in simulate_training(model, fab, iterations=4)[1:]])
+        # NIC failure: one server loses ONE optical NIC (reroute via rest+EPS).
+        fab_n = make_fabric("mixnet", cfg)
+        fab_n.fail_server_nic(0, failed_nics=1)
+        nic = np.mean([r.total for r in simulate_training(model, fab_n, iterations=4, seed=1)[1:]])
+        # GPU failure: backup GPU reachable via OCS forwarding -> one server's
+        # effective optical degree drops by the forwarding share (~2 NICs).
+        fab_g = make_fabric("mixnet", cfg)
+        fab_g.fail_server_nic(0, failed_nics=2)
+        gpu = np.mean([r.total for r in simulate_training(model, fab_g, iterations=4, seed=2)[1:]])
+        # Full-node failure: the replacement node connects via EPS only (§5.4).
+        fab_f = make_fabric("mixnet", cfg)
+        fab_f.fail_server_ocs(0)
+        node = np.mean([r.total for r in simulate_training(model, fab_f, iterations=4, seed=3)[1:]])
+        _row(
+            f"fig14_failures/{name}", 0.0,
+            f"nic=+{(nic/base-1)*100:.1f}% gpu=+{(gpu/base-1)*100:.1f}% "
+            f"node=+{(node/base-1)*100:.1f}% (paper: 3.3/5.1/6.5%)",
+        )
+
+
+def fig16_nvl72(fast=False):
+    """Fig 16: MixNet with optical I/O vs NVL72-style scale-up; the paper
+    reports 1.3x lower iteration time from offloading EP to regional OCS."""
+    from repro.configs.paper_models import DEEPSEEK_R1
+    from repro.core.fabric import FabricConfig, make_fabric
+    from repro.core.netsim import simulate_training
+    import dataclasses
+
+    model = dataclasses.replace(DEEPSEEK_R1, ep_degree=128, pp_degree=16)
+    # NVL72: EP crosses scale-up domains over 800G Ethernet scale-out;
+    # MixNet (optical I/O) matches total GPU bandwidth but gives EP a
+    # reconfigurable regional OCS (half the NVLink budget moved to OCS).
+    nvl = make_fabric("fat-tree", FabricConfig(
+        num_servers=256, link_gbps=800, nics_per_server=1,
+        nvlink_bytes_per_s=7.2e12 / 8))
+    mix = make_fabric("mixnet", FabricConfig(
+        num_servers=256, link_gbps=800, nics_per_server=5, eps_nics=1, ocs_nics=4,
+        nvlink_bytes_per_s=3.6e12 / 8))
+    t_nvl = np.mean([r.total for r in simulate_training(model, nvl, iterations=3)[1:]])
+    t_mix = np.mean([r.total for r in simulate_training(model, mix, iterations=3)[1:]])
+    _row("fig16_nvl72/deepseek-v3", 0.0,
+         f"mixnet_speedup={t_nvl/t_mix:.2f}x (paper: 1.3x)")
+
+
+def fig19_copilot(fast=False):
+    """Fig 19: COPILOT top-k accuracy vs unchanged/random baselines."""
+    from repro.core.copilot import CopilotPredictor, topk_accuracy
+    from repro.core.netsim import GateTraceGenerator
+    from repro.core.traffic import TrafficMonitor
+
+    layers, e = 8, 16
+    trace = GateTraceGenerator(layers, e, seed=5)
+    monitor = TrafficMonitor(layers, e)
+    cop = CopilotPredictor(layers, e, fit_steps=100)
+    rng = np.random.default_rng(0)
+    acc = {"copilot": [], "unchanged": [], "random": []}
+    iters = 15 if fast else 40
+    t0 = time.perf_counter()
+    for it in range(iters):
+        loads = trace.step()
+        for l in range(layers):
+            monitor.record(l, loads[l] * 1000)
+        if it >= 3:
+            for l in range(layers - 1):
+                acc["copilot"].append(topk_accuracy(cop.predict(l, loads[l]), loads[l + 1], 4))
+                acc["unchanged"].append(
+                    topk_accuracy(cop.baseline_unchanged(loads[l]), loads[l + 1], 4))
+                acc["random"].append(topk_accuracy(cop.baseline_random(rng), loads[l + 1], 4))
+        cop.update(monitor)
+        monitor.advance()
+    us = (time.perf_counter() - t0) * 1e6
+    _row("fig19_copilot/top4", us,
+         f"copilot={np.mean(acc['copilot']):.2f} unchanged={np.mean(acc['unchanged']):.2f} "
+         f"random={np.mean(acc['random']):.2f} (paper ordering: copilot highest)")
+
+
+def fig21_reconfig_delay(fast=False):
+    """Fig 21: reconfiguration turnaround vs number of switched pairs
+    (control-plane cost of Algorithm 1 + the modeled 25 ms OCS actuation)."""
+    from repro.core import topology as topo
+
+    rng = np.random.default_rng(0)
+    for pairs in (1, 4, 16):
+        n = max(2 * pairs, 4)
+        demand = rng.random((n, n)) * 1e9
+        us = _timeit(lambda: topo.reconfigure_ocs(demand, alpha=6, num_servers=n,
+                                                  experts_per_server=1), reps=5)
+        _row(f"fig21_reconfig_delay/{pairs}pairs", us,
+             f"solver_ms={us/1e3:.2f} total_with_ocs_ms={us/1e3 + 25:.1f} "
+             f"(paper testbed: 41-47ms)")
+
+
+def fig26_scalability(fast=False):
+    """Fig 26: scaling cluster size; MixNet keeps ~fat-tree throughput and
+    ~2x perf-per-dollar as GPUs grow."""
+    from repro.configs.paper_models import MIXTRAL_8X7B
+    from repro.core import cost as costm
+
+    sizes = (128, 512) if fast else (128, 512, 2048)
+    for servers in sizes:
+        times = _fabric_iter_times(MIXTRAL_8X7B, 400, servers=servers, iters=3)
+        eff_m = costm.cost_efficiency(times["mixnet"], costm.fabric_cost("mixnet", servers, 400))
+        eff_f = costm.cost_efficiency(times["fat-tree"], costm.fabric_cost("fat-tree", servers, 400))
+        _row(f"fig26_scalability/{servers*8}gpus", 0.0,
+             f"vs_ft_speed={times['fat-tree']/times['mixnet']:.2f}x "
+             f"perf_per_dollar_vs_ft={eff_m/eff_f:.2f}x (paper: ~2x)")
+
+
+def fig27_optical_degree(fast=False):
+    """Fig 27: more optical circuits -> faster a2a (cost-equivalent sweep)."""
+    from repro.configs.paper_models import MIXTRAL_8X22B
+    from repro.core.fabric import FabricConfig, make_fabric
+    from repro.core.netsim import simulate_training
+
+    # Paper semantics: EPS stays fixed (2 NICs); alpha sweeps the cheap
+    # optical fanout ("more communication-intensive GPU pairs can be
+    # provisioned with dedicated high-bandwidth optical circuits").
+    prev = None
+    for alpha in (2, 4, 6):
+        fab = make_fabric("mixnet", FabricConfig(
+            num_servers=128, link_gbps=100, ocs_nics=alpha, eps_nics=2))
+        t = float(np.mean([r.total for r in simulate_training(
+            MIXTRAL_8X22B, fab, iterations=3)[1:]]))
+        trend = "" if prev is None else f" ({'faster' if t <= prev else 'slower'})"
+        _row(f"fig27_optical_degree/alpha{alpha}", 0.0, f"iter_ms={t*1e3:.0f}{trend}")
+        prev = t
+
+
+def fig28_reconfig_latency(fast=False):
+    """Fig 28: iteration time vs OCS reconfiguration latency; flat through
+    ms-scale, cliff at second-scale."""
+    from repro.configs.paper_models import MIXTRAL_8X22B
+    from repro.core.fabric import FabricConfig, make_fabric
+    from repro.core.netsim import simulate_training
+
+    base = None
+    for delay in (1e-6, 0.025, 1.0, 10.0):
+        fab = make_fabric("mixnet", FabricConfig(num_servers=128, link_gbps=400,
+                                                 reconfig_delay_s=delay))
+        t = float(np.mean([r.total for r in simulate_training(
+            MIXTRAL_8X22B, fab, iterations=3)[1:]]))
+        base = base or t
+        _row(f"fig28_reconfig_latency/{delay}s", 0.0,
+             f"normalized={t/base:.2f} (paper: ~1.0 until ~1s, then degrades)")
+
+
+def kernels(fast=False):
+    """Framework table: Pallas kernels validated against oracles (interpret)
+    + oracle-path timings on CPU."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 128, 256))
+    w = jax.random.normal(key, (8, 256, 512))
+    us = _timeit(lambda: jax.block_until_ready(ref.grouped_matmul(x, w)))
+    _row("kernels/grouped_matmul_ref", us, "oracle=jnp einsum")
+    logits = jax.random.normal(key, (4096, 64))
+    us = _timeit(lambda: jax.block_until_ready(ref.topk_gating(logits, 6)[0]))
+    _row("kernels/topk_gating_ref", us, "oracle=softmax+top_k")
+    q = jax.random.normal(key, (1, 8, 1024, 64))
+    k = jax.random.normal(key, (1, 2, 1024, 64))
+    us = _timeit(lambda: jax.block_until_ready(
+        ref.flash_attention_chunked(q, k, k, causal=True)))
+    _row("kernels/flash_attention_chunked", us, "oracle=streaming softmax")
+
+
+
+def beyond_placement(fast=False):
+    """Beyond-paper ablation: the TPU-analogue expert re-placement — how many
+    bytes-on-wire Algorithm-1-driven placement removes from realized MoE
+    traffic, across trace seeds (the gain the runtime controller banks each
+    reconfiguration)."""
+    from repro.core.netsim import GateTraceGenerator
+    from repro.core.placement import solve_expert_placement
+
+    rng_gains = []
+    devices, experts = 8, 32
+    for seed in range(3 if fast else 8):
+        trace = GateTraceGenerator(4, experts, seed=seed)
+        loads = trace.step()
+        demand = np.zeros((devices, experts))
+        g = np.random.default_rng(seed)
+        for d in range(devices):
+            w = g.dirichlet(loads[0] * 6 + 1e-2)
+            demand[d] = w * 1e9
+        plan = solve_expert_placement(demand, experts // devices)
+        rng_gains.append(plan.gain / max(plan.cost_before, 1e-9))
+    _row(
+        "beyond_placement/gain", 0.0,
+        f"mean_wire_reduction={np.mean(rng_gains)*100:.0f}% "
+        f"min={np.min(rng_gains)*100:.0f}% max={np.max(rng_gains)*100:.0f}% "
+        f"(runtime re-placement, DESIGN.md §2)",
+    )
+
+
+def beyond_a2a_hierarchy(fast=False):
+    """Beyond-paper ablation: the delegation a2a's per-stage traffic split —
+    stage 1 (scale-up analogue) vs stage 2 (scale-out analogue) wire bytes
+    for a 16-wide region at different group sizes."""
+    payload = 1.0  # normalized per-device send volume
+    p = 16
+    for g in (2, 4, 8):
+        n_groups = p // g
+        stage1 = payload * (g - 1) / g       # intra-group exchange
+        stage2 = payload * (n_groups - 1) / n_groups  # inter-group exchange
+        flat = payload * (p - 1) / p
+        _row(
+            f"beyond_a2a_hierarchy/group{g}", 0.0,
+            f"stage1={stage1:.2f} stage2={stage2:.2f} flat={flat:.2f} "
+            f"scale_out_reduction={(1 - stage2/flat)*100:.0f}%",
+        )
+
+
+ALL = {
+    "fig2_traffic_volume": fig2_traffic_volume,
+    "fig3_timeline": fig3_timeline,
+    "fig10_testbed": fig10_testbed,
+    "fig11_cost": fig11_cost,
+    "fig12_speedups": fig12_speedups,
+    "fig13_pareto": fig13_pareto,
+    "fig14_failures": fig14_failures,
+    "fig16_nvl72": fig16_nvl72,
+    "fig19_copilot": fig19_copilot,
+    "fig21_reconfig_delay": fig21_reconfig_delay,
+    "fig26_scalability": fig26_scalability,
+    "fig27_optical_degree": fig27_optical_degree,
+    "fig28_reconfig_latency": fig28_reconfig_latency,
+    "kernels": kernels,
+    "beyond_placement": beyond_placement,
+    "beyond_a2a_hierarchy": beyond_a2a_hierarchy,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=tuple(ALL), default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in ALL.items():
+        if args.only and name != args.only:
+            continue
+        fn(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

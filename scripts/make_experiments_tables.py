@@ -1,0 +1,36 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dryrun_results.json."""
+
+import json
+import sys
+
+
+def table(rows, multi_pod):
+    out = []
+    out.append(
+        "| arch | shape | bottleneck | compute (s) | memory (s) | collective (s) "
+        "| MODEL/HLO | roofline frac | HBM/dev | fits 16G |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if bool(r.get("multi_pod")) != multi_pod:
+            continue
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — skipped — | | | | | | | |"
+            )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['bottleneck']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {r['per_device_hbm_peak']/1e9:.1f} GB | {'yes' if r['fits_hbm'] else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = json.load(open(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"))
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(table(rows, False))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(table(rows, True))

@@ -1,0 +1,9 @@
+"""MixNet (SIGCOMM'25) on JAX/TPU.
+
+The paper's runtime-reconfigurable MoE training fabric as a production-grade
+framework: control plane (`repro.core`), substrate model zoo
+(`repro.models`), Pallas TPU kernels (`repro.kernels`), distribution rules
+(`repro.parallel`), training/serving runtimes (`repro.train`, `repro.serve`)
+and the multi-pod launcher (`repro.launch`).  See DESIGN.md for the paper ->
+TPU adaptation map and EXPERIMENTS.md for dry-run/roofline/perf records.
+"""

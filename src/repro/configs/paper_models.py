@@ -1,0 +1,48 @@
+"""The paper's own evaluated MoE models (Table 1 / §D.1) as netsim
+``SimModel``s — used by the benchmark suite to reproduce Figs 11-14/25-28 —
+plus a trainable Mixtral-8x7B ``ModelConfig`` for the end-to-end examples.
+"""
+
+from repro.core.netsim import SimModel
+from repro.models.config import ModelConfig, MoEConfig
+
+# ---- netsim models (Table 1 + §D.1 parallelization) -----------------------
+
+MIXTRAL_8X7B = SimModel(
+    "mixtral-8x7b", num_blocks=32, d_model=4096, d_ff=14336, num_experts=8,
+    top_k=2, num_heads=32, ep_degree=8, tp_degree=4, pp_degree=4,
+)
+MIXTRAL_8X22B = SimModel(
+    "mixtral-8x22b", num_blocks=56, d_model=6144, d_ff=16384, num_experts=8,
+    top_k=2, num_heads=48, ep_degree=8, tp_degree=8, pp_degree=8,
+)
+QWEN_MOE = SimModel(
+    "qwen-moe", num_blocks=24, d_model=2048, d_ff=1408, num_experts=64,
+    top_k=4, num_heads=16, ep_degree=32, tp_degree=1, pp_degree=4,
+)
+DEEPSEEK_R1 = SimModel(
+    "deepseek-r1", num_blocks=61, d_model=7168, d_ff=2048, num_experts=256,
+    top_k=8, num_heads=128, ep_degree=64, tp_degree=1, pp_degree=16,
+)
+
+SIM_MODELS = {
+    m.name: m for m in (MIXTRAL_8X7B, MIXTRAL_8X22B, QWEN_MOE, DEEPSEEK_R1)
+}
+
+# ---- trainable Mixtral-8x7B (prototype-scale examples, Fig 10) ------------
+
+MIXTRAL_8X7B_CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    head_dim=128,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff=14336, backend="mixnet"),
+    act="silu",
+    dtype="bfloat16",
+    remat="full",
+)

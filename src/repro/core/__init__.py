@@ -1,0 +1,29 @@
+"""MixNet core: the paper's contribution as composable JAX modules.
+
+Control plane: :mod:`repro.core.traffic` (demand characterization),
+:mod:`repro.core.copilot` (COPILOT prediction), :mod:`repro.core.topology`
+(Algorithm 1), :mod:`repro.core.placement` (TPU-native expert re-placement),
+:mod:`repro.core.reconfig` (runtime controller + failure handling).
+
+Data plane: :mod:`repro.core.collectives` (hierarchical a2a / all-reduce).
+
+Evaluation plane: :mod:`repro.core.fabric`, :mod:`repro.core.netsim`,
+:mod:`repro.core.cost` (the paper's §7 simulations).
+"""
+
+from repro.core import (
+    collectives,
+    copilot,
+    cost,
+    fabric,
+    netsim,
+    placement,
+    reconfig,
+    topology,
+    traffic,
+)
+
+__all__ = [
+    "collectives", "copilot", "cost", "fabric", "netsim",
+    "placement", "reconfig", "topology", "traffic",
+]

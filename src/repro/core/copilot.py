@@ -1,0 +1,182 @@
+"""MIXNET-COPILOT: traffic demand prediction for the FP's first all-to-all
+(paper Appendix B.1).
+
+The first forward all-to-all of layer ``l+1`` cannot be characterized before
+the gate of layer ``l+1`` runs — but it *can* be predicted: COPILOT models
+the conditional probability ``P[j, i] = Pr(token -> expert j in layer l+1 |
+token -> expert i in layer l)`` and predicts the next layer's load as
+``P @ x_l``.  ``P`` is fit per layer by weighted least squares over a rolling
+window of realized load pairs, constrained to the column-stochastic polytope:
+
+    min_P   sum_i w_i * || y_i - P x_i ||^2
+    s.t.    P >= 0,  1^T P = 1^T          (each column a distribution)
+
+The paper uses scipy SLSQP; we solve the identical program with projected
+gradient descent in JAX (jit-compiled, deterministic, no scipy dependency in
+the hot path) — tests cross-check against scipy on small instances.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "fit_transition_matrix",
+    "predict_next_load",
+    "topk_accuracy",
+    "CopilotPredictor",
+]
+
+
+def _project_columns_to_simplex(p: jax.Array) -> jax.Array:
+    """Euclidean projection of every column of ``p`` onto the simplex.
+
+    Duchi et al. (2008) sort-based projection, vmapped over columns.
+    """
+
+    def proj(v):
+        n = v.shape[0]
+        u = jnp.sort(v)[::-1]
+        css = jnp.cumsum(u)
+        idx = jnp.arange(1, n + 1)
+        cond = u - (css - 1.0) / idx > 0
+        rho = jnp.max(jnp.where(cond, idx, 0))
+        theta = (css[rho - 1] - 1.0) / rho
+        return jnp.maximum(v - theta, 0.0)
+
+    return jax.vmap(proj, in_axes=1, out_axes=1)(p)
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def fit_transition_matrix(
+    x: jax.Array,
+    y: jax.Array,
+    weights: jax.Array,
+    p_init: jax.Array,
+    steps: int = 200,
+    lr: float = 0.5,
+) -> jax.Array:
+    """Fit column-stochastic ``P`` minimizing ``sum_i w_i ||y_i - P x_i||^2``.
+
+    Args:
+      x: ``[k, E]`` previous-layer load distributions (rows sum to 1).
+      y: ``[k, E]`` next-layer load distributions.
+      weights: ``[k]`` window weights (newest-heaviest).
+      p_init: ``[E, E]`` warm start (e.g. previous fit or uniform).
+      steps: projected-gradient iterations.
+    """
+    w = weights / (weights.sum() + 1e-12)
+
+    def loss_fn(p):
+        pred = x @ p.T  # [k, E]
+        return jnp.sum(w[:, None] * (y - pred) ** 2)
+
+    # Lipschitz-ish step size from the data scale.
+    scale = jnp.maximum(jnp.sum(w[:, None] * x**2), 1e-6)
+    step = lr / scale
+
+    def body(p, _):
+        g = jax.grad(loss_fn)(p)
+        p = _project_columns_to_simplex(p - step * g)
+        return p, ()
+
+    p, _ = jax.lax.scan(body, p_init, None, length=steps)
+    return p
+
+
+def predict_next_load(p: jax.Array, x: jax.Array) -> jax.Array:
+    """Predicted next-layer load distribution ``P @ x``."""
+    return p @ x
+
+
+def topk_accuracy(pred: np.ndarray, truth: np.ndarray, k: int) -> float:
+    """Fraction of the true top-k experts recovered in the predicted top-k."""
+    pred_top = set(np.argsort(-np.asarray(pred))[:k].tolist())
+    true_top = set(np.argsort(-np.asarray(truth))[:k].tolist())
+    return len(pred_top & true_top) / max(k, 1)
+
+
+@dataclasses.dataclass
+class CopilotState:
+    """Per-layer transition matrices ``[L-1, E, E]`` plus the fit window."""
+
+    transitions: np.ndarray
+    fitted_steps: int = 0
+
+
+class CopilotPredictor:
+    """Online COPILOT: consume a :class:`TrafficMonitor`, emit predictions.
+
+    Workflow per iteration (mirrors Fig. 20):
+      1. ``update(monitor)`` — refit transition matrices from the window.
+      2. ``predict(layer, observed_load)`` — forecast layer+1's load from
+         layer's realized load, ahead of layer+1's gate.
+    """
+
+    def __init__(
+        self,
+        num_layers: int,
+        num_experts: int,
+        *,
+        window: int = 8,
+        decay: float = 0.7,
+        fit_steps: int = 150,
+    ):
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.window = window
+        self.decay = decay
+        self.fit_steps = fit_steps
+        eye_mix = np.full((num_experts, num_experts), 1.0 / num_experts)
+        self.state = CopilotState(
+            transitions=np.tile(eye_mix, (max(num_layers - 1, 1), 1, 1))
+        )
+
+    def _window_weights(self, k: int) -> np.ndarray:
+        # Newest-heaviest exponential decay, as in Eq. (1)'s weighted average.
+        w = self.decay ** np.arange(k - 1, -1, -1)
+        return w / w.sum()
+
+    @staticmethod
+    def _normalize(loads: np.ndarray) -> np.ndarray:
+        s = loads.sum(axis=-1, keepdims=True)
+        return np.where(s > 0, loads / np.maximum(s, 1e-12), 1.0 / loads.shape[-1])
+
+    def update(self, monitor) -> None:
+        """Refit every layer's transition matrix from the monitor window."""
+        for layer, x_raw, y_raw in monitor.layer_pairs():
+            if len(x_raw) < 2:
+                continue
+            x = self._normalize(x_raw)
+            y = self._normalize(y_raw)
+            w = self._window_weights(len(x))
+            p0 = jnp.asarray(self.state.transitions[layer])
+            p = fit_transition_matrix(
+                jnp.asarray(x), jnp.asarray(y), jnp.asarray(w), p0, steps=self.fit_steps
+            )
+            self.state.transitions[layer] = np.asarray(p)
+        self.state.fitted_steps += 1
+
+    def predict(self, layer: int, observed_load: np.ndarray) -> np.ndarray:
+        """Forecast layer+1's load distribution from layer's realized load."""
+        if layer >= self.num_layers - 1:
+            raise ValueError("no next layer to predict")
+        x = self._normalize(np.asarray(observed_load, dtype=np.float64))
+        return np.asarray(self.state.transitions[layer] @ x)
+
+    # Baselines from Fig. 19 -------------------------------------------------
+    @staticmethod
+    def baseline_unchanged(observed_load: np.ndarray) -> np.ndarray:
+        """'Unchanged topology': assume layer l+1 loads == layer l loads."""
+        x = np.asarray(observed_load, dtype=np.float64)
+        return x / max(x.sum(), 1e-12)
+
+    def baseline_random(self, rng: np.random.Generator) -> np.ndarray:
+        """'Uniform bandwidth allocation': random/uniform expectation."""
+        p = rng.random(self.num_experts)
+        return p / p.sum()

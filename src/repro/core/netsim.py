@@ -1,0 +1,367 @@
+"""Flow-level training-iteration simulator (paper §7: large-scale simulations).
+
+The paper drives htsim (packet level) with a FlexFlow task DAG.  On a CPU-only
+container we replace packet fidelity with a flow-level completion-time model
+(see DESIGN.md §2) but keep the *same experiment structure*:
+
+  model + parallelization --> per-layer timeline of compute phases and
+  all-to-all/all-reduce/p2p communication phases --> composed through the
+  1F1B pipeline schedule --> one iteration time, per fabric.
+
+The gate-trace generator reproduces the §3 measurement characteristics:
+temporally varying, spatially sparse expert loads with cross-layer
+conditional structure (which is what MIXNET-COPILOT exploits) and a
+load-balancing-loss-driven slow convergence toward uniformity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.copilot import CopilotPredictor
+from repro.core.fabric import Fabric
+from repro.core.traffic import TrafficMonitor
+
+__all__ = [
+    "SimModel",
+    "GateTraceGenerator",
+    "IterationResult",
+    "simulate_iteration",
+    "simulate_training",
+]
+
+
+@dataclasses.dataclass
+class SimModel:
+    """Just enough of an MoE model + parallelization to cost one iteration.
+
+    Mirrors Table 1 / §D.1 configurations.
+    """
+
+    name: str
+    num_blocks: int
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int
+    num_heads: int
+    seq_len: int = 4096
+    micro_batch: int = 8
+    num_microbatches: int = 8
+    ep_degree: int = 8
+    tp_degree: int = 4
+    pp_degree: int = 4
+    dtype_bytes: int = 2
+    vocab: int = 32000
+    # Effective per-GPU compute throughput (flop/s) — A100 bf16 peak x MFU.
+    flops_per_gpu: float = 312e12 * 0.4
+
+    # ---- derived sizes -----------------------------------------------------
+    @property
+    def tokens_per_microbatch(self) -> int:
+        return self.micro_batch * self.seq_len
+
+    @property
+    def layers_per_stage(self) -> int:
+        return max(self.num_blocks // self.pp_degree, 1)
+
+    @property
+    def gpus_per_stage(self) -> int:
+        return self.ep_degree * self.tp_degree
+
+    def param_count(self) -> float:
+        attn = 4 * self.d_model * self.d_model
+        expert = 3 * self.d_model * self.d_ff
+        return self.num_blocks * (attn + self.num_experts * expert) + 2 * self.vocab * self.d_model
+
+    # ---- per-microbatch per-stage compute times -----------------------------
+    def attention_flops(self) -> float:
+        t = self.tokens_per_microbatch
+        proj = 2 * t * 4 * self.d_model * self.d_model
+        attn = 2 * 2 * self.micro_batch * self.seq_len**2 * self.d_model
+        return (proj + attn) * self.layers_per_stage
+
+    def expert_flops(self) -> float:
+        t = self.tokens_per_microbatch
+        return 2 * t * self.top_k * 3 * self.d_model * self.d_ff * self.layers_per_stage
+
+    def attention_time(self) -> float:
+        return self.attention_flops() / (self.flops_per_gpu * self.gpus_per_stage)
+
+    def expert_time(self) -> float:
+        return self.expert_flops() / (self.flops_per_gpu * self.gpus_per_stage)
+
+    def expert_time_per_layer(self) -> float:
+        return self.expert_time() / self.layers_per_stage
+
+    def attention_time_per_layer(self) -> float:
+        return self.attention_time() / self.layers_per_stage
+
+    # ---- communication sizes -------------------------------------------------
+    def a2a_bytes_total(self) -> float:
+        """Bytes moved by ONE all-to-all phase of one layer (whole EP group)."""
+        return self.tokens_per_microbatch * self.top_k * self.d_model * self.dtype_bytes
+
+    def dp_gradient_bytes_per_server(self, gpus_per_server: int = 8) -> float:
+        """Gradient bytes a server contributes to the DP ring.
+
+        Each GPU holds params / (gpus per model replica); a server aggregates
+        its 8 GPUs' shards through the gateway (hierarchical all-reduce §5.3).
+        """
+        gpus_per_replica = max(self.gpus_per_stage * self.pp_degree, 1)
+        per_gpu = self.param_count() / gpus_per_replica
+        return per_gpu * gpus_per_server * self.dtype_bytes
+
+
+class GateTraceGenerator:
+    """Synthetic per-layer expert-load traces with §3's statistics.
+
+    Layer l+1's load is a noisy linear image of layer l's load through a
+    slowly drifting column-stochastic matrix; all loads relax toward uniform
+    over iterations (load-balancing loss) while staying sparse per iteration.
+    """
+
+    def __init__(
+        self,
+        num_layers: int,
+        num_experts: int,
+        *,
+        seed: int = 0,
+        sparsity: float = 3.0,
+        drift: float = 0.02,
+        balance_rate: float = 2e-3,
+    ):
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.rng = np.random.default_rng(seed)
+        self.sparsity = sparsity
+        self.drift = drift
+        self.balance_rate = balance_rate
+        self._transition = np.stack(
+            [self._random_stochastic() for _ in range(max(num_layers - 1, 1))]
+        )
+        self._x0 = self.rng.dirichlet(np.full(num_experts, 1.0 / sparsity))
+        self.iteration = 0
+
+    def _random_stochastic(self) -> np.ndarray:
+        e = self.num_experts
+        m = self.rng.dirichlet(np.full(e, 1.0 / self.sparsity), size=e).T  # cols sum 1
+        return m
+
+    def step(self) -> np.ndarray:
+        """Advance one iteration; return ``[L, E]`` per-layer load fractions."""
+        e = self.num_experts
+        uniform = np.full(e, 1.0 / e)
+        # Drift the transitions and the entry distribution.
+        blend = min(self.balance_rate * self.iteration, 0.9)
+        for i in range(self._transition.shape[0]):
+            if self.rng.random() < self.drift * 10:
+                noise = self._random_stochastic()
+                self._transition[i] = 0.95 * self._transition[i] + 0.05 * noise
+        # Per-iteration spikiness (Fig 4a): the entry distribution jumps
+        # substantially between iterations even late in training.
+        x = (1 - blend) * self._x0 + blend * uniform
+        x = 0.65 * x + 0.35 * self.rng.dirichlet(np.full(e, 1.0 / self.sparsity))
+        x = x / x.sum()
+        loads = [x]
+        for l in range(self.num_layers - 1):
+            x = self._transition[l] @ x
+            x = 0.9 * x + 0.1 * self.rng.dirichlet(np.full(e, 1.0 / self.sparsity))
+            x = (1 - blend) * x + blend * uniform
+            x = x / x.sum()
+            loads.append(x)
+        self.iteration += 1
+        return np.stack(loads)
+
+    def device_demand(
+        self,
+        load: np.ndarray,
+        model: SimModel,
+        num_servers: int,
+        *,
+        node_limit: int = 4,
+    ) -> np.ndarray:
+        """Expert load fraction -> inter-server byte demand for one a2a.
+
+        Two production effects shape the matrix (Fig 4b / Fig 5):
+          * tokens within one batch shard are semantically correlated and
+            concentrate on few experts (low-concentration Dirichlet rows);
+          * group-limited gating (DeepSeek-V2/V3, cited by the paper) caps
+            the number of *nodes* a token may route to, keeping the matrix
+            sparse at server granularity even with hundreds of experts.
+        """
+        e = self.num_experts
+        total = SimModel.a2a_bytes_total(model)
+        per_src = total / max(num_servers, 1)
+        per_server = max(e // max(num_servers, 1), 1)
+        # Server-level attractiveness = summed load of its experts.
+        srv_load = np.add.reduceat(
+            np.resize(load, per_server * num_servers), np.arange(num_servers) * per_server
+        )
+        srv_load = srv_load / srv_load.sum()
+        dem = np.zeros((num_servers, num_servers))
+        limit = min(max(node_limit, 1), num_servers)
+        for src in range(num_servers):
+            # Group-limited gating: this shard's tokens reach <= limit servers.
+            p = srv_load + 1e-9
+            p = p / p.sum()
+            dests = self.rng.choice(num_servers, size=limit, replace=False, p=p)
+            weights = self.rng.dirichlet(srv_load[dests] * 8.0 + 0.1)
+            dem[src, dests] += per_src * weights
+        np.fill_diagonal(dem, 0.0)
+        return dem
+
+
+@dataclasses.dataclass
+class IterationResult:
+    total: float
+    attn_compute: float
+    expert_compute: float
+    a2a: float
+    reconfig_blocked: float
+    dp_allreduce: float
+    pp_bubble: float
+
+    def breakdown(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _stage_times(
+    model: SimModel,
+    fabric: Fabric,
+    loads: np.ndarray,
+    trace: GateTraceGenerator,
+    num_servers_region: int,
+    predictor: CopilotPredictor | None,
+    monitor: TrafficMonitor | None,
+) -> tuple[float, float, float]:
+    """One PP stage's communication over a FULL iteration (all microbatches).
+
+    Reconfiguration semantics follow Fig 20: the topology is reconfigured
+    *twice per MoE layer per iteration* (once covering the FP pair of
+    all-to-alls, once the BP pair), amortized across microbatches.  A
+    reconfiguration blocks only if its delay exceeds the pipelined compute
+    window between consecutive all-to-alls of that layer — with 25 ms OCS and
+    production-size compute this is fully hidden (Fig 28's flat region), and
+    degradation appears once the delay approaches the per-layer compute
+    budget, reproducing Fig 28's cliff.
+    """
+    attn_f = model.attention_time_per_layer()
+    exp_f = model.expert_time_per_layer()
+    m = model.num_microbatches
+    # Compute window available to hide one reconfiguration: the layer's
+    # compute across the iteration's microbatches (fwd + bwd ~ 3x fwd).
+    hide_window = m * (attn_f + exp_f)
+    a2a_total = 0.0
+    blocked = 0.0
+    prev_load = None
+    for li in range(model.layers_per_stage):
+        load = loads[li % loads.shape[0]]
+        demand = trace.device_demand(load, model, num_servers_region)
+        # --- FP reconfig. For the layer's FIRST a2a the true matrix is not
+        # yet known (§5.1): COPILOT predicts it (accurate prediction ->
+        # near-matching circuits); without COPILOT the fabric keeps the
+        # previous layer's topology (never blocks, but circuits mismatch).
+        if fabric.cfg.reconfig_delay_s <= 1e-3:
+            # Microsecond-scale OCS: exact reconfig fits before a2a#1 (Fig 28).
+            blocked += max(0.0, fabric.prepare(demand, can_hide=True))
+        elif predictor is not None and prev_load is not None and loads.shape[0] > 1:
+            pred = predictor.predict(min(li - 1, predictor.num_layers - 2), prev_load)
+            pred_demand = trace.device_demand(pred, model, num_servers_region)
+            blocked += fabric.prepare(pred_demand, can_hide=True)
+        # else: reuse previous topology — no prepare call at all.
+        a2a_total += m * fabric.alltoall_time(demand)
+        # --- FP a2a #2 (combine, transposed matrix): reconfig hidden when the
+        # compute window allows; otherwise the overflow blocks the pipe.
+        overflow = max(0.0, fabric.cfg.reconfig_delay_s - hide_window)
+        b = fabric.prepare(demand.T, can_hide=overflow <= 0.0)
+        blocked += min(b, overflow)  # only the un-hidden part blocks
+        a2a_total += m * fabric.alltoall_time(demand.T)
+        # --- BP reconfig + a2a pair (same matrices, §5.1; window = bwd compute).
+        overflow_b = max(0.0, fabric.cfg.reconfig_delay_s - 2.0 * hide_window)
+        b = fabric.prepare(demand, can_hide=overflow_b <= 0.0)
+        blocked += min(b, overflow_b)
+        a2a_total += m * fabric.alltoall_time(demand)
+        a2a_total += m * fabric.alltoall_time(demand.T)
+        if monitor is not None:
+            monitor.record(li, load * model.tokens_per_microbatch * model.top_k)
+        prev_load = load
+    fwd_compute = (attn_f + exp_f) * model.layers_per_stage
+    bwd_compute = 2.0 * fwd_compute
+    return m * (fwd_compute + bwd_compute), a2a_total, blocked
+
+
+def simulate_iteration(
+    model: SimModel,
+    fabric: Fabric,
+    trace: GateTraceGenerator,
+    *,
+    num_servers_region: int | None = None,
+    predictor: CopilotPredictor | None = None,
+    monitor: TrafficMonitor | None = None,
+    gpus_per_server: int = 8,
+) -> IterationResult:
+    """Cost one training iteration of ``model`` on ``fabric``."""
+    if num_servers_region is None:
+        num_servers_region = max(model.gpus_per_stage // gpus_per_server, 2)
+    loads = trace.step()
+
+    compute, a2a, blocked, = _stage_times(
+        model, fabric, loads, trace, num_servers_region, predictor, monitor
+    )
+    # 1F1B: the critical path stretches the per-stage work by (M+P-1)/M.
+    m, p = model.num_microbatches, model.pp_degree
+    stretch = (m + p - 1) / m
+    pipeline = stretch * (compute + a2a)
+    bubble = (stretch - 1.0) * (compute + a2a)
+    # DP gradient all-reduce (hierarchical on MixNet), half overlapped with bwd.
+    dp_bytes = model.dp_gradient_bytes_per_server(gpus_per_server)
+    dp = 0.5 * fabric.allreduce_time(dp_bytes)
+    total = pipeline + blocked + dp
+    return IterationResult(
+        total=total,
+        attn_compute=m * model.attention_time() * 3.0,
+        expert_compute=m * model.expert_time() * 3.0,
+        a2a=stretch * a2a,
+        reconfig_blocked=blocked,
+        dp_allreduce=dp,
+        pp_bubble=bubble,
+    )
+
+
+def simulate_training(
+    model: SimModel,
+    fabric: Fabric,
+    *,
+    iterations: int = 10,
+    seed: int = 0,
+    use_copilot: bool = True,
+    gpus_per_server: int = 8,
+) -> list[IterationResult]:
+    """Run several iterations, fitting COPILOT online like the real system."""
+    region = max(model.gpus_per_stage // gpus_per_server, 2)
+    trace = GateTraceGenerator(model.layers_per_stage, model.num_experts, seed=seed)
+    monitor = TrafficMonitor(model.layers_per_stage, model.num_experts)
+    predictor = (
+        CopilotPredictor(model.layers_per_stage, model.num_experts, fit_steps=60)
+        if use_copilot and model.layers_per_stage > 1
+        else None
+    )
+    results = []
+    for it in range(iterations):
+        res = simulate_iteration(
+            model,
+            fabric,
+            trace,
+            num_servers_region=region,
+            predictor=predictor,
+            monitor=monitor,
+            gpus_per_server=gpus_per_server,
+        )
+        results.append(res)
+        if predictor is not None and it >= 1:
+            predictor.update(monitor)
+        monitor.advance()
+    return results

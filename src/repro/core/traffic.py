@@ -1,0 +1,135 @@
+"""All-to-all traffic characterization (paper §5.1).
+
+Each MoE block performs four all-to-all phases per iteration — dispatch and
+combine in the forward pass, and their mirror images in the backward pass —
+all sharing one traffic matrix (or its transpose).  The matrix is fully
+determined by the gate output *before* the communication happens, which is
+what makes in-training reconfiguration possible at all.
+
+These helpers are pure ``jnp`` so they can run inside the training step (the
+monitor adds no extra pass over the data — the dispatch indices already
+exist, exactly as Megatron's token dispatcher exposes them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TrafficRecord",
+    "expert_load_from_gates",
+    "alltoall_matrix_from_gates",
+    "device_traffic_matrix",
+    "TrafficMonitor",
+]
+
+
+def expert_load_from_gates(expert_indices: jax.Array, num_experts: int) -> jax.Array:
+    """Tokens routed to each expert: ``[E]`` counts from ``[..., top_k]`` ids."""
+    one_hot = jax.nn.one_hot(expert_indices.reshape(-1), num_experts, dtype=jnp.int32)
+    return one_hot.sum(axis=0)
+
+
+def alltoall_matrix_from_gates(
+    expert_indices: jax.Array,
+    token_src_device: jax.Array,
+    num_experts: int,
+    num_devices: int,
+    bytes_per_token: float = 1.0,
+) -> jax.Array:
+    """``[num_devices, E]`` dispatch matrix: bytes device *d* sends to expert *e*.
+
+    ``token_src_device`` assigns each token (flattened) to its source device;
+    ``expert_indices`` is ``[tokens, top_k]``.
+    """
+    flat_idx = expert_indices.reshape(expert_indices.shape[0], -1)  # [T, k]
+    tok_dev = token_src_device.reshape(-1)
+    k = flat_idx.shape[-1]
+    dev_rep = jnp.repeat(tok_dev, k)
+    exp_flat = flat_idx.reshape(-1)
+    mat = jnp.zeros((num_devices, num_experts), dtype=jnp.float32)
+    mat = mat.at[dev_rep, exp_flat].add(bytes_per_token)
+    return mat
+
+
+def device_traffic_matrix(
+    dispatch: jax.Array | np.ndarray,
+    experts_per_device: int,
+) -> np.ndarray:
+    """Fold ``[D, E]`` dispatch into the ``[D, D]`` device all-to-all matrix."""
+    dispatch = np.asarray(dispatch, dtype=np.float64)
+    n_dev, n_exp = dispatch.shape
+    owner_devices = n_exp // experts_per_device
+    per_owner = dispatch.reshape(n_dev, owner_devices, experts_per_device).sum(-1)
+    if owner_devices == n_dev:
+        mat = per_owner
+    else:
+        # Experts live on a subset/superset of the sending devices — pad/fold.
+        mat = np.zeros((n_dev, n_dev))
+        mat[:, :owner_devices] = per_owner
+    np.fill_diagonal(mat, 0.0)
+    return mat
+
+
+@dataclasses.dataclass
+class TrafficRecord:
+    """One observation: per-layer expert load + device a2a matrix."""
+
+    layer: int
+    step: int
+    expert_load: np.ndarray  # [E]
+    device_matrix: np.ndarray  # [D, D]
+
+
+class TrafficMonitor:
+    """Rolling window of per-layer traffic records (host-side ring buffer).
+
+    The monitor is the producer side of the control loop: the MoE layer emits
+    its realized expert load every step, the monitor keeps the last ``window``
+    observations per layer, and :mod:`repro.core.copilot` consumes them to fit
+    the transition matrices.
+    """
+
+    def __init__(self, num_layers: int, num_experts: int, window: int = 8):
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.window = window
+        self._loads: list[list[np.ndarray]] = [[] for _ in range(num_layers)]
+        self._matrices: list[list[np.ndarray]] = [[] for _ in range(num_layers)]
+        self.step = 0
+
+    def record(self, layer: int, expert_load, device_matrix=None) -> None:
+        load = np.asarray(expert_load, dtype=np.float64)
+        if load.shape != (self.num_experts,):
+            raise ValueError(f"expert load shape {load.shape}")
+        buf = self._loads[layer]
+        buf.append(load)
+        if len(buf) > self.window:
+            buf.pop(0)
+        if device_matrix is not None:
+            mbuf = self._matrices[layer]
+            mbuf.append(np.asarray(device_matrix, dtype=np.float64))
+            if len(mbuf) > self.window:
+                mbuf.pop(0)
+
+    def advance(self) -> None:
+        self.step += 1
+
+    def loads(self, layer: int) -> np.ndarray:
+        """``[window, E]`` recent loads for a layer (newest last)."""
+        return np.stack(self._loads[layer]) if self._loads[layer] else np.zeros((0, self.num_experts))
+
+    def latest_matrix(self, layer: int) -> np.ndarray | None:
+        return self._matrices[layer][-1] if self._matrices[layer] else None
+
+    def layer_pairs(self):
+        """Consecutive (prev_layer_loads, next_layer_loads) training pairs."""
+        for layer in range(self.num_layers - 1):
+            x, y = self.loads(layer), self.loads(layer + 1)
+            n = min(len(x), len(y))
+            if n:
+                yield layer, x[-n:], y[-n:]

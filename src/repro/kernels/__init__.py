@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots (+ jnp oracles).
+
+``grouped_matmul`` — per-expert GEMM (MoE FFN); ``topk_gating`` — fused
+router; ``flash_attention`` — blockwise attention with GQA / sliding window /
+softcap.  Use :mod:`repro.kernels.ops` as the entry point.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,147 @@
+"""Blockwise (flash) attention Pallas kernel — the prefill hot spot.
+
+Streaming-softmax attention tiled for the TPU memory hierarchy: a
+``(bq x D)`` query tile stays VMEM-resident while ``(bk x D)`` key/value
+tiles stream through the innermost grid axis; running max / sum / output
+accumulators live in VMEM scratch and persist across the kv axis (TPU grids
+iterate the last axis innermost, revisiting the same output block).
+
+Supports GQA (kv-head picked by index map — no materialized repeat), causal
+masking, sliding windows (gemma2 / recurrentgemma local attention) and logit
+soft-capping (gemma2).  Validated in interpret mode against
+:func:`repro.kernels.ref.flash_attention`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.grouped_matmul import pick_block
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    kv_steps: int,
+    bq: int,
+    bk: int,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+):
+    kv_i = pl.program_id(3)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)  # [bk, D]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = pl.program_id(2) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == kv_steps - 1)
+    def _store():
+        # Fully-masked rows (can happen for non-causal windows) get zeros.
+        denom = jnp.where(l_ref[...] > 0.0, l_ref[...], 1.0)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Attention ``q[B,Hq,S,D], k/v[B,Hkv,S,D] -> [B,Hq,S,D]``."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if hq % hkv != 0:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    bq = pick_block(s, bq)
+    bk = pick_block(s, bk)
+    kv_steps = s // bk
+    grid = (b, hq, s // bq, kv_steps)
+    scale = 1.0 / (d**0.5)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        kv_steps=kv_steps,
+        bq=bq,
+        bk=bk,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

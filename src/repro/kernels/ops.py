@@ -1,0 +1,113 @@
+"""Public kernel entry points.
+
+Each op dispatches between the Pallas TPU kernel and the pure-jnp reference:
+
+  * ``backend="auto"``  — Pallas on TPU, reference elsewhere (CPU containers
+    validate kernels in interpret mode through the tests, but run models on
+    the reference path for speed).
+  * ``backend="pallas"`` — force the kernel (interpret=True off-TPU).
+  * ``backend="ref"``   — force the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.topk_gating import topk_gating_pallas
+
+__all__ = [
+    "grouped_matmul", "topk_gating", "flash_attention", "rmsnorm",
+    "ssd_chunk", "on_tpu",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if on_tpu() else "chunked"
+    return backend
+
+
+def _resolve_simple(backend: str) -> str:
+    """For ops with no chunked variant: auto -> pallas on TPU, ref off it."""
+    mode = _resolve(backend)
+    return "ref" if mode == "chunked" else mode
+
+
+def grouped_matmul(x, w, *, backend: str = "auto"):
+    mode = _resolve_simple(backend)
+    if mode == "pallas":
+        return grouped_matmul_pallas(x, w, interpret=not on_tpu())
+    return ref.grouped_matmul(x, w)
+
+
+def topk_gating(logits, k: int, *, backend: str = "auto"):
+    mode = _resolve_simple(backend)
+    if mode == "pallas":
+        return topk_gating_pallas(logits, k, interpret=not on_tpu())
+    return ref.topk_gating(logits, k)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    backend: str = "auto",
+):
+    mode = _resolve(backend)
+    if mode == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            interpret=not on_tpu(),
+        )
+    if mode == "ref":
+        return ref.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap
+        )
+    # auto off-TPU: chunked memory-efficient path so big-S graphs lower with
+    # bounded buffers (semantically identical to ref; tested).
+    return ref.flash_attention_chunked(
+        q, k, v, causal=causal, window=window, softcap=softcap
+    )
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, backend: str = "auto"):
+    """Fused RMSNorm over [T, D] tokens (TPU kernel; jnp path elsewhere)."""
+    mode = _resolve_simple(backend)
+    if mode == "pallas":
+        from repro.kernels.rmsnorm import rmsnorm_pallas
+
+        return rmsnorm_pallas(x, w, eps=eps, interpret=not on_tpu())
+    from repro.models.layers import rms_norm
+
+    return rms_norm(x[None], w, eps)[0]
+
+
+def ssd_chunk(x, da, bmat, cmat, *, backend: str = "auto"):
+    """Mamba-2 SSD intra-chunk compute: (y_intra, chunk_state)."""
+    mode = _resolve_simple(backend)
+    if mode == "pallas":
+        from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+        return ssd_chunk_pallas(x, da, bmat, cmat, interpret=not on_tpu())
+    import jax.numpy as jnp
+    import numpy as np
+
+    l = x.shape[1]
+    cum = jnp.cumsum(da, axis=1)
+    cb = jnp.einsum("gln,gsn->gls", cmat, bmat)
+    gate = jnp.exp(cum[:, :, None] - cum[:, None, :])
+    mask = np.tril(np.ones((l, l), bool))
+    y = jnp.einsum("gls,gls,gsp->glp", cb, jnp.where(mask, gate, 0.0), x)
+    st = jnp.einsum("gsn,gs,gsp->gnp", bmat, jnp.exp(cum[:, -1:] - cum), x)
+    return y, st

@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes
+and asserts allclose against these functions, and on non-TPU backends the
+``ops`` wrappers route here (interpret-mode Pallas is for validation, not
+speed).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "grouped_matmul",
+    "topk_gating",
+    "flash_attention",
+    "flash_attention_chunked",
+]
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-expert GEMM: ``[E, C, D] @ [E, D, F] -> [E, C, F]`` (f32 accum)."""
+    out = jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    return out.astype(x.dtype)
+
+
+def topk_gating(logits: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Softmax over experts then top-k.
+
+    Args:
+      logits: ``[T, E]`` router logits.
+    Returns:
+      (weights ``[T, k]`` f32 softmax probabilities of the chosen experts,
+       indices ``[T, k]`` i32, descending by probability).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    return weights, idx.astype(jnp.int32)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Reference attention with GQA, causal/sliding-window mask, logit softcap.
+
+    Shapes: q ``[B, Hq, S, D]``, k/v ``[B, Hkv, S, D]`` with Hq % Hkv == 0.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    logits = logits * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    bq: int = 512,
+) -> jax.Array:
+    """Memory-efficient attention: ``lax.scan`` over query chunks —
+    O(S * bq) score memory instead of O(S^2).
+
+    Same semantics as :func:`flash_attention`; this is the pure-jnp path the
+    *models* use off-TPU so that 32k+ prefill graphs lower with bounded
+    buffers (the Pallas kernel covers the TPU target).  Partitioner-friendly
+    by construction: every tensor keeps the ``[B, H, S, D]`` layout (chunks
+    via dynamic slices on the seq dim, output accumulated in place), and the
+    dots take bf16 operands with f32 accumulation — the heads dim shards
+    cleanly with zero collectives.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    while s % bq:
+        bq //= 2
+    nq = s // bq
+    scale = 1.0 / float(d) ** 0.5
+    kpos = jnp.arange(s)
+
+    def body(out, qstart):
+        qc = jax.lax.dynamic_slice_in_dim(q, qstart, bq, axis=2)  # [B,H,bq,D]
+        logits = jnp.einsum(
+            "bhqd,bhkd->bhqk", qc, k, preferred_element_type=jnp.float32
+        )
+        logits = logits * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        qpos = qstart + jnp.arange(bq)
+        mask = jnp.ones((bq, s), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        oc = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        out = jax.lax.dynamic_update_slice_in_dim(out, oc, qstart, axis=2)
+        return out, None
+
+    starts = jnp.arange(nq) * bq
+    out, _ = jax.lax.scan(body, jnp.zeros_like(q), starts)
+    return out

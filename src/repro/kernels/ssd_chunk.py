@@ -1,0 +1,79 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+The SSD dual form's dominant compute is the per-chunk quadratic part:
+
+    y[l] = sum_{s<=l} (C_l . B_s) * exp(cum_a[l] - cum_a[s]) * x_s
+    state = sum_s B_s^T (exp(cum_a[L-1] - cum_a[s]) * x_s)
+
+One grid cell = one (batch*head, chunk): the [L, N] B/C tiles, the [L, P]
+dt-weighted inputs and the [L] decay prefix all live in VMEM; the kernel
+fuses the C@B^T GEMM, the causal decay gating, the gated [L,L]@[L,P] GEMM
+and the chunk-state GEMM into one pass (the jnp path materializes the
+[L, L, H] gate tensor in HBM).  The sequential inter-chunk recurrence stays
+outside (it is O(chunks) tiny GEMMs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_chunk_pallas"]
+
+
+def _ssd_kernel(x_ref, da_ref, b_ref, c_ref, y_ref, s_ref):
+    x = x_ref[0].astype(jnp.float32)  # [L, P]
+    cum = jnp.cumsum(da_ref[0].astype(jnp.float32))  # [L]
+    bmat = b_ref[0].astype(jnp.float32)  # [L, N]
+    cmat = c_ref[0].astype(jnp.float32)  # [L, N]
+    l = x.shape[0]
+
+    cb = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)  # [L, L]
+    decay = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1) <= jax.lax.broadcasted_iota(
+        jnp.int32, (l, l), 0
+    )
+    gate = jnp.where(mask, jnp.exp(decay), 0.0)
+    y_ref[0] = jnp.dot(cb * gate, x, preferred_element_type=jnp.float32).astype(
+        y_ref.dtype
+    )
+    decay_to_end = jnp.exp(cum[-1] - cum)  # [L]
+    s_ref[0] = jnp.dot(
+        bmat.T, x * decay_to_end[:, None], preferred_element_type=jnp.float32
+    ).astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(
+    x: jax.Array,  # [G, L, P] dt-weighted inputs (G = batch*heads*chunks)
+    da: jax.Array,  # [G, L] per-step log-decay (dt * A)
+    bmat: jax.Array,  # [G, L, N]
+    cmat: jax.Array,  # [G, L, N]
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y_intra [G, L, P], chunk_state [G, N, P])."""
+    g, l, p = x.shape
+    n = bmat.shape[-1]
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, l, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, l, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, p), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, l, p), jnp.float32),
+            jax.ShapeDtypeStruct((g, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, da, bmat, cmat)

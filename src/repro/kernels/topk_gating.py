@@ -1,0 +1,69 @@
+"""Fused softmax + top-k router Pallas kernel (the MoE gate unit).
+
+The gate is tiny FLOP-wise but sits on the critical path before the dispatch
+all-to-all (§5.1: its output *is* the traffic matrix), so fusing the softmax,
+the k iterative arg-max passes and the probability normalization into one
+VMEM-resident pass over the ``[T, E]`` logits removes several HBM round
+trips.  Token blocks ride the grid; the expert axis stays whole (E <= a few
+hundred fits VMEM trivially).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.grouped_matmul import pick_block
+
+__all__ = ["topk_gating_pallas"]
+
+
+def _gating_kernel(logits_ref, w_ref, i_ref, *, k: int):
+    x = logits_ref[...].astype(jnp.float32)  # [bt, E]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    ex = jnp.exp(x - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    cur = probs
+    ws, ids = [], []
+    for _ in range(k):
+        idx = jnp.argmax(cur, axis=-1)
+        val = jnp.max(cur, axis=-1)
+        ws.append(val)
+        ids.append(idx.astype(jnp.int32))
+        # Mask the chosen expert out for the next pass.
+        onehot = jax.nn.one_hot(idx, cur.shape[-1], dtype=cur.dtype)
+        cur = cur - onehot * val[:, None]
+    w_ref[...] = jnp.stack(ws, axis=-1)
+    i_ref[...] = jnp.stack(ids, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bt", "interpret"))
+def topk_gating_pallas(
+    logits: jax.Array,
+    k: int,
+    *,
+    bt: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """``[T, E]`` logits -> (``[T, k]`` f32 weights, ``[T, k]`` i32 indices)."""
+    t, e = logits.shape
+    bt = pick_block(t, bt)
+    grid = (t // bt,)
+    w, i = pl.pallas_call(
+        functools.partial(_gating_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, e), lambda ti: (ti, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
+            pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return w, i

@@ -1,0 +1,292 @@
+"""Collective / FLOP / HBM-byte extraction from compiled HLO text
+(§Roofline).
+
+``compiled.cost_analysis()`` has two gaps: collective bytes are absent, and
+while-loop bodies (scan-over-layers!) are counted ONCE instead of
+trip-count times.  This module re-derives all three roofline numerators
+from the optimized HLO with loop multipliers applied:
+
+  * FLOPs: every ``dot`` = 2 * prod(result dims) * prod(contracting dims).
+  * HBM bytes: operands + result of every top-level instruction of every
+    non-fused computation (fusion internals never touch HBM).
+  * Collective wire bytes per device, ring formulas:
+      all-gather        out * (g-1)/g
+      all-reduce        2 * size * (g-1)/g
+      reduce-scatter    out * (g-1)
+      all-to-all        size * (g-1)/g
+      collective-permute  size
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "parse_hlo_collectives", "collective_bytes"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+_NO_HBM_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "copy-start", "copy-done", "add-dependency", "domain",
+}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(type_str: str) -> tuple[list[int], int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return [], 0
+    dt, dims = m.groups()
+    return ([int(d) for d in dims.split(",")] if dims else []), _DTYPE_BYTES.get(dt, 0)
+
+
+def _match_paren(s: str, start: int = 0) -> int:
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return -1
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "kind", "operands", "attrs", "raw")
+
+    def __init__(self, name, type_str, kind, operands, attrs, raw=""):
+        self.name = name
+        self.type_str = type_str
+        self.kind = kind
+        self.operands = operands
+        self.attrs = attrs
+        self.raw = raw
+
+
+def _parse_instr(line: str) -> Instr | None:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") or " = " not in s:
+        return None
+    name, _, rhs = s.partition(" = ")
+    name = name.strip().lstrip("%")
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        end = _match_paren(rhs)
+        if end < 0:
+            return None
+        type_str, rest = rhs[: end + 1], rhs[end + 1 :].strip()
+    else:
+        type_str, _, rest = rhs.partition(" ")
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    kind = m.group(1)
+    op_start = m.end() - 1
+    op_end = _match_paren(rest, op_start)
+    if op_end < 0:
+        op_end = len(rest) - 1
+    operands = _NAME_RE.findall(rest[op_start : op_end + 1])
+    attrs = rest[op_end + 1 :]
+    return Instr(name, type_str, kind, operands, attrs, raw=s)
+
+
+def _parse_module(hlo_text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    current = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if current is None:
+            if line.endswith("{") and "->" in line and ("(" in line):
+                header = line.lstrip("ENTRY ").strip()
+                m = re.match(r"%?([\w\.\-]+)\s*\(", header)
+                if m:
+                    current = m.group(1)
+                    comps[current] = []
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        instr = _parse_instr(line)
+        if instr is not None:
+            comps[current].append(instr)
+    return comps
+
+
+def _loop_multipliers(comps: dict[str, list[Instr]]):
+    """(multiplier per computation, fused computation set)."""
+    calls: dict[str, set[str]] = defaultdict(set)
+    fused: set[str] = set()
+    trip_of_body: dict[str, float] = {}
+    for name, instrs in comps.items():
+        for it in instrs:
+            for m in re.finditer(
+                r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)", it.attrs
+            ):
+                callee = m.group(1)
+                if callee in comps:
+                    calls[name].add(callee)
+                    if it.kind == "fusion" and "calls=" in it.attrs:
+                        if f"calls=%{callee}" in it.attrs or f"calls={callee}" in it.attrs:
+                            fused.add(callee)
+            # branch computations: {%a, %b}
+            for m in re.finditer(r"branch_computations=\{([^}]*)\}", it.attrs):
+                for callee in _NAME_RE.findall(m.group(1)):
+                    if callee in comps:
+                        calls[name].add(callee)
+            if it.kind == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", it.attrs)
+                cm = re.search(r"condition=%?([\w\.\-]+)", it.attrs)
+                trip = 1.0
+                if cm and cm.group(1) in comps:
+                    trip = _cond_trip(comps[cm.group(1)])
+                if bm:
+                    trip_of_body[bm.group(1)] = max(
+                        trip_of_body.get(bm.group(1), 1.0), trip
+                    )
+
+    # mult[c] = number of times computation c executes: the caller's
+    # multiplier, times the trip count when c is entered as a while body.
+    mult: dict[str, float] = defaultdict(float)
+    called = {c for cs in calls.values() for c in cs}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 64 or m <= mult[name]:
+            return
+        mult[name] = m
+        for callee in calls.get(name, ()):
+            visit(callee, m * trip_of_body.get(callee, 1.0), depth + 1)
+
+    for root in set(comps) - called:
+        visit(root, 1.0)
+    return mult, fused
+
+
+def _cond_trip(cond_instrs: list[Instr]) -> float:
+    """Trip count from a while condition: the max integer constant compared."""
+    vals = [int(x) for it in cond_instrs for x in _TRIP_RE.findall(it.raw)]
+    return float(max(vals)) if vals else 1.0
+
+
+def _group_size(attrs: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def analyze_hlo(
+    hlo_text: str, total_devices: int, *, f32_collective_scale: float = 1.0
+) -> dict:
+    """Per-device {flops, hbm_bytes, collectives, collective_counts} with
+    while-loop trip counts applied.
+
+    ``f32_collective_scale``: the CPU XLA backend promotes bf16 dots to f32,
+    so collectives adjacent to GEMMs carry f32 copies of tensors a TPU
+    program would move in bf16.  Passing 0.5 for bf16 models deflates
+    f32-typed collectives back to target-dtype bytes (documented in
+    EXPERIMENTS.md §Dry-run).
+    """
+    comps = _parse_module(hlo_text)
+    mult, fused = _loop_multipliers(comps)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, int] = defaultdict(int)
+
+    for name, instrs in comps.items():
+        m = mult[name]
+        table = {it.name: it.type_str for it in instrs}
+        in_fusion = name in fused
+        for it in instrs:
+            if it.kind == "dot":
+                out_shape, _ = _dims_of(it.type_str)
+                lhs_shape, _ = _dims_of(table.get(it.operands[0], "")) if it.operands else ([], 0)
+                contract = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", it.attrs)
+                if cm and cm.group(1):
+                    for ci in cm.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lhs_shape):
+                            contract *= lhs_shape[ci]
+                n_out = 1
+                for d in out_shape:
+                    n_out *= d
+                flops += 2.0 * n_out * contract * m
+            if it.kind in _COLLECTIVES or any(
+                it.kind == f"{c}-start" for c in _COLLECTIVES
+            ):
+                kind = it.kind.replace("-start", "")
+                size = _shape_bytes(it.type_str)
+                g = _group_size(it.attrs, total_devices)
+                if kind == "all-gather":
+                    wire = size * (g - 1) / max(g, 1)
+                elif kind == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / max(g, 1)
+                elif kind == "reduce-scatter":
+                    wire = size * (g - 1)
+                elif kind == "all-to-all":
+                    wire = size * (g - 1) / max(g, 1)
+                else:
+                    wire = size
+                if "f32[" in it.type_str and f32_collective_scale != 1.0:
+                    wire *= f32_collective_scale
+                coll_bytes[kind] += wire * m
+                coll_counts[kind] += 1
+            if not in_fusion and it.kind not in _NO_HBM_OPS:
+                size = _shape_bytes(it.type_str)
+                opsz = sum(_shape_bytes(table[o]) for o in it.operands if o in table)
+                hbm += (size + opsz) * m
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collectives": dict(coll_bytes),
+        "collective_counts": dict(coll_counts),
+    }
+
+
+def parse_hlo_collectives(hlo_text: str, total_devices: int):
+    r = analyze_hlo(hlo_text, total_devices)
+    return r["collectives"], r["collective_counts"]
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> float:
+    return float(sum(parse_hlo_collectives(hlo_text, total_devices)[0].values()))

@@ -1,0 +1,154 @@
+"""ShapeDtypeStruct stand-ins for every dry-run input: weak-type-correct,
+carrying NamedShardings, zero device allocation.
+
+``make_cell`` assembles everything one (arch x shape x mesh) cell needs:
+the step function plus sharded abstract (params, opt_state, batch / caches).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, init_adamw
+from repro.parallel.sharding import ShardingPlan, make_plan, virtual_experts
+from repro.train.train_step import make_serve_step, make_train_step
+
+__all__ = ["input_specs", "abstract_state", "make_cell"]
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, plan: ShardingPlan) -> dict:
+    """Abstract model inputs for one cell (tokens/labels or decode inputs)."""
+    b, s = shape.global_batch, shape.seq_len
+    batch_ax = plan.batch_axes if b % max(plan.data_size, 1) == 0 else ()
+    batch_spec = P(batch_ax or None)
+    seq_ax = plan.model_axis if s % max(plan.model_size, 1) == 0 else None
+    tok_spec = P(batch_ax or None, seq_ax)
+
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((b, s), jnp.int32, mesh, tok_spec),
+            "labels": _sds((b, s), jnp.int32, mesh, tok_spec),
+        }
+    elif shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32, mesh, tok_spec)}
+    else:  # decode: one new token
+        batch = {"tokens": _sds((b, 1), jnp.int32, mesh, P(batch_ax or None, None))}
+    if cfg.family == "audio" and shape.kind != "decode":
+        batch["frames"] = _sds(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype), mesh,
+            P(batch_ax or None, None, None),
+        )
+    if cfg.vision_patches and shape.kind != "decode":
+        batch["patches"] = _sds(
+            (b, cfg.vision_patches, cfg.d_model), jnp.dtype(cfg.dtype), mesh,
+            P(batch_ax or None, None, None),
+        )
+    return batch
+
+
+def _shaped(tree, spec_tree, mesh):
+    """eval_shape pytree + spec pytree -> sharded ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=NamedSharding(mesh, s)
+        ),
+        tree,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+def abstract_state(cfg: ModelConfig, plan: ShardingPlan, mesh, opt_cfg: AdamWConfig):
+    """(params_sds, opt_sds, param_specs) without allocating anything."""
+    key = jax.random.PRNGKey(0)
+    spec_box = {}
+
+    def init_params_only(k):
+        p, s = tfm.init_model(k, cfg, plan)
+        spec_box["specs"] = s  # specs are static python, captured at trace
+        return p
+
+    params_shape = jax.eval_shape(init_params_only, key)
+    specs = spec_box["specs"]
+    params_sds = _shaped(params_shape, specs, mesh)
+    opt_shape = jax.eval_shape(partial(init_adamw, cfg=opt_cfg), params_shape)
+    opt_specs = {
+        "mu": specs,
+        "nu": specs,
+        "step": P(),
+    }
+    opt_sds = _shaped(opt_shape, opt_specs, mesh)
+    return params_sds, opt_sds, specs
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeSpec, plan, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    cache_shape = jax.eval_shape(
+        partial(tfm.init_caches, cfg=cfg, batch=b, max_len=s),
+    )
+    # Batch axes only when divisible (long_500k has batch 1 -> replicated).
+    spec_plan = plan if b % max(plan.data_size, 1) == 0 else _no_batch(plan)
+    spec_tree = tfm.cache_specs(cfg, spec_plan)
+    return _shaped(cache_shape, spec_tree, mesh)
+
+
+def _no_batch(plan: ShardingPlan) -> ShardingPlan:
+    import dataclasses
+
+    return dataclasses.replace(plan, batch_axes=())
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, opt_cfg=None, microbatches=None):
+    """(fn, args_sds) ready for jax.jit(fn).lower(*args_sds)."""
+    plan = make_plan(mesh)
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
+    batch = input_specs(cfg, shape, mesh, plan)
+
+    if shape.kind == "train":
+        params_sds, opt_sds, _ = abstract_state(cfg, plan, mesh, opt_cfg)
+        step = make_train_step(
+            cfg, plan, opt_cfg, mesh=mesh, microbatches=microbatches or 1
+        )
+
+        def fn(params, opt_state, b):
+            return step(params, opt_state, b)
+
+        fn.donate_argnums = (0, 1)  # params/opt updated in place
+        return fn, (params_sds, opt_sds, batch)
+
+    if shape.kind == "prefill":
+        params_sds, _, _ = abstract_state(cfg, plan, mesh, opt_cfg)
+
+        def fn(params, b):
+            feats, _, caches = tfm.model_apply(
+                params, b, cfg, plan, mesh=mesh, mode="prefill"
+            )
+            logits = tfm.logits_from_features(params, feats[:, -1:], cfg)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+        return fn, (params_sds, batch)
+
+    # decode
+    params_sds, _, _ = abstract_state(cfg, plan, mesh, opt_cfg)
+    caches_sds = abstract_caches(cfg, shape, plan, mesh)
+    serve = make_serve_step(cfg, plan, mesh=mesh)
+    t_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+
+    def fn(params, caches, tokens, t):
+        return serve(params, caches, tokens, t)
+
+    fn.donate_argnums = (1,)  # KV caches updated in place
+    return fn, (params_sds, caches_sds, batch["tokens"], t_sds)

@@ -1,0 +1,430 @@
+"""Mixture-of-Experts layer with two dispatch backends.
+
+``einsum``  — GShard-style dense dispatch/combine einsums.  Fully
+  auto-shardable under pjit (the expert dim rides the ``model`` axis and XLA
+  inserts the all-to-alls): this is the *paper-faithful baseline* a static
+  fabric serves.
+
+``mixnet``  — the paper's data plane (§5.3) as an explicit ``shard_map``
+  program over the ``model`` axis: tokens are sorted into per-destination
+  send buffers, exchanged with the **hierarchical delegation all-to-all**
+  (:func:`repro.core.collectives.mixnet_all_to_all`), computed with the
+  grouped Pallas GEMM, and returned the same way.  EP traffic never leaves
+  the ``model`` axis — the regional locality the measurement study (§3)
+  found.  Runtime expert re-placement (the OCS-reconfiguration analogue) is
+  realized by permuting expert->slot assignments: the trainer permutes the
+  stacked expert weights (:func:`repro.core.placement.apply_placement`) and
+  passes the same ``expert_perm`` here so the router addresses the new
+  slots — the wire protocol itself never changes, exactly like pushing a
+  new cross-map to the OCS.
+
+Virtual experts (DESIGN.md §5): when E < model-axis size P, every expert is
+split into r = P/E tensor shards; a token is dispatched to all r shards of
+its expert and the combine sums the partial products, restoring the
+row-split matmul identity.  This makes the expert dim shard exactly for any
+assigned architecture (grok-1: 8 experts -> 16 virtual on a 16-wide axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import mixnet_all_to_all
+from repro.kernels import ops
+from repro.parallel.sharding import ShardingPlan, constrain, virtual_experts
+
+__all__ = ["init_moe", "moe_apply", "MoEStats", "router_losses"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MoEStats:
+    """Per-layer telemetry consumed by the MixNet control plane (§5.1)."""
+
+    expert_load: jax.Array  # [E] tokens routed to each (real) expert
+    balance_loss: jax.Array
+    z_loss: jax.Array
+    dropped_fraction: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg, plan: ShardingPlan):
+    e = cfg.moe
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ev, r = virtual_experts(e.num_experts, plan.model_size)
+    if e.d_ff % r != 0:
+        raise ValueError(f"expert d_ff {e.d_ff} not divisible by replication {r}")
+    f_shard = e.d_ff // r
+    keys = jax.random.split(key, 5)
+
+    params = {
+        "router": jax.random.normal(keys[0], (d, e.num_experts), jnp.float32) * d**-0.5,
+        "w_in": jax.random.normal(keys[1], (ev, d, f_shard), dtype) * d**-0.5,
+        "w_gate": jax.random.normal(keys[2], (ev, d, f_shard), dtype) * d**-0.5,
+        "w_out": jax.random.normal(keys[3], (ev, f_shard, d), dtype) * e.d_ff**-0.5,
+    }
+    ex_ax = plan.dim_axis(ev)
+    specs = {
+        "router": P(None, None),
+        "w_in": P(ex_ax, plan.fsdp_axis, None),
+        "w_gate": P(ex_ax, plan.fsdp_axis, None),
+        "w_out": P(ex_ax, None, plan.fsdp_axis),
+    }
+    if e.num_shared_experts:
+        f_sh = e.d_ff * e.num_shared_experts
+        k5, k6, k7 = jax.random.split(keys[4], 3)
+        params["shared"] = {
+            "w_in": jax.random.normal(k5, (d, f_sh), dtype) * d**-0.5,
+            "w_gate": jax.random.normal(k6, (d, f_sh), dtype) * d**-0.5,
+            "w_out": jax.random.normal(k7, (f_sh, d), dtype) * f_sh**-0.5,
+        }
+        sh_ax = plan.dim_axis(f_sh)
+        specs["shared"] = {
+            "w_in": P(plan.fsdp_axis, sh_ax),
+            "w_gate": P(plan.fsdp_axis, sh_ax),
+            "w_out": P(sh_ax, plan.fsdp_axis),
+        }
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# routing helpers
+# ---------------------------------------------------------------------------
+
+
+def router_losses(logits: jax.Array, idx: jax.Array, num_experts: int):
+    """Switch-style balance loss + router z-loss (both f32 scalars)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    mean_prob = probs.reshape(-1, num_experts).mean(axis=0)
+    counts = jax.nn.one_hot(idx.reshape(-1), num_experts, dtype=jnp.float32).sum(0)
+    frac = counts / jnp.maximum(counts.sum(), 1.0)
+    balance = num_experts * jnp.sum(frac * mean_prob)
+    z = jnp.mean(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1) ** 2)
+    return balance, z
+
+
+def _capacity(tokens: int, top_k: int, num_experts: int, factor: float) -> int:
+    c = int(np.ceil(tokens * top_k * factor / num_experts))
+    return max(4, int(np.ceil(c / 4) * 4))
+
+
+def _expert_ffn(x, w_in, w_gate, w_out, act):
+    """x [..., E, C, D] grouped through per-expert SwiGLU."""
+    h = jnp.einsum("...ecd,edf->...ecf", x, w_in)
+    g = jnp.einsum("...ecd,edf->...ecf", x, w_gate)
+    actfn = jax.nn.silu if act in ("silu", "swiglu") else jax.nn.gelu
+    h = actfn(g) * h
+    return jnp.einsum("...ecf,efd->...ecd", h, w_out)
+
+
+# ---------------------------------------------------------------------------
+# einsum (GShard) backend
+# ---------------------------------------------------------------------------
+
+
+def _moe_einsum(params, x, cfg, plan: ShardingPlan, mesh=None):
+    e = cfg.moe
+    b, s, d = x.shape
+    ev, r = virtual_experts(e.num_experts, plan.model_size)
+    # Token groups: one group per sequence shard so the dispatch einsum's
+    # quadratic term stays bounded and group boundaries match the sharding.
+    g = plan.model_size if (plan.model_size > 1 and s % plan.model_size == 0) else 1
+    t = s // g
+    batch_ok = b % max(plan.data_size, 1) == 0
+    gspec = (plan.batch_axes or None) if batch_ok else None
+    xg = x.reshape(b * g, t, d)
+    # GShard-baseline sharding: groups ride the DP axes only (tokens gathered
+    # over the model axis), the expert dim rides the model axis.  Dispatch is
+    # an all-gather, combine a reduce-scatter — the static-fabric baseline
+    # the mixnet backend's true hierarchical a2a improves on (§Perf).
+    xg = constrain(xg, mesh, P(gspec, None, None))
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    weights, idx = ops.topk_gating(logits.reshape(-1, e.num_experts), e.top_k)
+    weights = weights.reshape(b * g, t, e.top_k)
+    idx = idx.reshape(b * g, t, e.top_k)
+    # Renormalize the kept top-k weights (standard for k>1 routers).
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    cap = _capacity(t, e.top_k, e.num_experts, e.capacity_factor)
+    onehot = jax.nn.one_hot(idx, e.num_experts, dtype=jnp.float32)  # [G,T,K,E]
+    # Position of each (token, choice) within its expert's capacity buffer.
+    flat = onehot.reshape(b * g, t * e.top_k, e.num_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat  # rank among same-expert picks
+    pos = pos.reshape(b * g, t, e.top_k, e.num_experts)
+    keep = (pos < cap) * onehot
+    dropped = 1.0 - keep.sum() / (b * g * t * e.top_k)
+    pos_oh = jax.nn.one_hot(
+        jnp.minimum(pos, cap - 1).astype(jnp.int32), cap, dtype=jnp.float32
+    )
+    dispatch = jnp.einsum("gtke,gtkec->gtec", keep, pos_oh)  # [G,T,E,C]
+    combine = jnp.einsum("gtke,gtkec,gtk->gtec", keep, pos_oh, weights)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)  # [G,E,C,D]
+    if r > 1:
+        xe = jnp.repeat(xe, r, axis=1)  # duplicate to all r virtual shards
+    ex_ax = plan.dim_axis(ev)
+    xe = constrain(xe, mesh, P(gspec, ex_ax, None, None))
+    ye = _expert_ffn(xe, params["w_in"], params["w_gate"], params["w_out"], cfg.act)
+    ye = constrain(ye, mesh, P(gspec, ex_ax, None, None))
+    if r > 1:
+        ye = ye.reshape(b * g, e.num_experts, r, cap, d).sum(axis=2)
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    out = out.reshape(b, s, d)
+
+    balance, z = router_losses(logits, idx, e.num_experts)
+    load = jax.nn.one_hot(idx.reshape(-1), e.num_experts, dtype=jnp.float32).sum(0)
+    stats = MoEStats(load, balance, z, dropped)
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# mixnet (shard_map hierarchical a2a) backend
+# ---------------------------------------------------------------------------
+
+
+def _pack_by_expert(tokens, expert_ids, valid, num_local, capacity):
+    """Scatter ``tokens [N, D]`` into ``[num_local, capacity, D]`` buffers by
+    local expert id; returns (packed, slot, keep) where ``slot`` maps each
+    source row to its buffer slot for the unpack (fixed shapes, overflow
+    dropped)."""
+    n, d = tokens.shape
+    onehot = jax.nn.one_hot(expert_ids, num_local, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # [N, E_local]
+    my_pos = jnp.sum(pos * onehot, axis=1)
+    keep = valid & (my_pos < capacity)
+    slot = jnp.where(keep, expert_ids * capacity + my_pos, num_local * capacity)
+    packed = jnp.zeros((num_local * capacity + 1, d), tokens.dtype)
+    packed = packed.at[slot].set(jnp.where(keep[:, None], tokens, 0))
+    packed = packed[:-1].reshape(num_local, capacity, d)
+    return packed, slot, keep
+
+
+def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, axis_names):
+    """Per-device MoE body (runs inside shard_map, or standalone at P=1)."""
+    e = cfg.moe
+    ev, r = virtual_experts(e.num_experts, plan.model_size)
+    p_axis = max(plan.model_size, 1)
+    ev_local = ev // p_axis
+    router, w_in, w_gate, w_out = params_local
+    bl, sl, d = xl.shape
+    tl = bl * sl
+    xt = xl.reshape(tl, d)
+
+    logits = xt.astype(jnp.float32) @ router
+    weights, idx = ops.topk_gating(logits, e.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Virtual destinations: choice (t, k) -> r shard targets, re-addressed by
+    # the runtime placement permutation (expert_perm[v] = physical slot).
+    vdest = (idx[..., None] * r + jnp.arange(r)).reshape(tl, e.top_k * r)
+    vdest = expert_perm[vdest]
+    wfull = jnp.repeat(weights, r, axis=-1)
+    dest_dev = vdest // ev_local
+    local_e = vdest % ev_local
+
+    # --- send buffers [P, Cp, D] + expert-id metadata ----------------------
+    cp = _capacity(tl, e.top_k * r, p_axis, e.capacity_factor)
+    flat_dev = dest_dev.reshape(-1)
+    oh = jax.nn.one_hot(flat_dev, p_axis, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh
+    my_pos = jnp.sum(pos * oh, axis=1)
+    keep = my_pos < cp
+    slot = jnp.where(keep, flat_dev * cp + my_pos, p_axis * cp)
+    src_rows = jnp.repeat(jnp.arange(tl), e.top_k * r)
+    send_x = jnp.zeros((p_axis * cp + 1, d), xl.dtype).at[slot].set(
+        jnp.where(keep[:, None], xt[src_rows], 0)
+    )
+    send_e = jnp.full((p_axis * cp + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(keep, local_e.reshape(-1), -1)
+    )
+    send_x = send_x[:-1].reshape(p_axis, cp, d)
+    send_e = send_e[:-1].reshape(p_axis, cp)
+
+    # --- hierarchical delegation all-to-all (the MixNet fabric) ------------
+    if p_axis > 1:
+        recv_x = mixnet_all_to_all(send_x, "model", e.a2a_group)
+        recv_e = mixnet_all_to_all(send_e[..., None], "model", e.a2a_group)[..., 0]
+    else:
+        recv_x, recv_e = send_x, send_e
+
+    # --- pack by local expert, grouped FFN, unpack --------------------------
+    rx = recv_x.reshape(p_axis * cp, d)
+    re = recv_e.reshape(p_axis * cp)
+    c2 = _capacity(p_axis * cp, 1, ev_local, e.capacity_factor)
+    packed, slot2, keep2 = _pack_by_expert(rx, jnp.maximum(re, 0), re >= 0, ev_local, c2)
+    ye = _expert_ffn(packed[None], w_in, w_gate, w_out, cfg.act)[0]
+    flat_y = jnp.concatenate(
+        [ye.reshape(ev_local * c2, d), jnp.zeros((1, d), ye.dtype)], axis=0
+    )
+    back = jnp.where(keep2[:, None], flat_y[jnp.minimum(slot2, ev_local * c2)], 0.0)
+    back = back.reshape(p_axis, cp, d)
+
+    # --- return trip + weighted combine -------------------------------------
+    ret = mixnet_all_to_all(back, "model", e.a2a_group) if p_axis > 1 else back
+    flat_ret = jnp.concatenate(
+        [ret.reshape(p_axis * cp, d), jnp.zeros((1, d), ret.dtype)], axis=0
+    )
+    contrib = flat_ret[jnp.minimum(slot, p_axis * cp)] * keep[:, None]
+    contrib = contrib.reshape(tl, e.top_k * r, d)
+    out = jnp.sum(contrib * wfull[..., None].astype(contrib.dtype), axis=1)
+    out = out.reshape(bl, sl, d).astype(xl.dtype)
+
+    balance, z = router_losses(logits, idx, e.num_experts)
+    load = jax.nn.one_hot(idx.reshape(-1), e.num_experts, dtype=jnp.float32).sum(0)
+    drop = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    # Reduce telemetry over every mesh axis so replicated out_specs hold.
+    for ax in axis_names:
+        load = jax.lax.psum(load, ax)
+        balance = jax.lax.pmean(balance, ax)
+        z = jax.lax.pmean(z, ax)
+        drop = jax.lax.pmean(drop, ax)
+    return out, load, balance, z, drop
+
+
+def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm=None):
+    e = cfg.moe
+    ev, _ = virtual_experts(e.num_experts, plan.model_size)
+    perm_arr = (
+        jnp.asarray(expert_perm, jnp.int32)
+        if expert_perm is not None
+        else jnp.arange(ev, dtype=jnp.int32)
+    )
+
+    def body(router, w_in, w_gate, w_out, xl, perm, axis_names=()):
+        return _moe_mixnet_local(
+            (router, w_in, w_gate, w_out), xl, cfg, plan, perm, axis_names
+        )
+
+    if mesh is None or plan.model_size <= 1:
+        out, load, balance, z, drop = body(
+            params["router"], params["w_in"], params["w_gate"], params["w_out"],
+            x, perm_arr,
+        )
+    else:
+        ex_ax = plan.dim_axis(ev)
+        axis_names = tuple(a for a in (plan.batch_axes or ()) if a) + (
+            (plan.model_axis,) if plan.model_axis else ()
+        )
+        # Token sharding for the shard_map region: seq over the model axis
+        # for train/prefill; decode (S=1) shards batch only — every device
+        # dispatches its batch rows to the expert owners over the a2a.
+        b_sz, s_sz = x.shape[0], x.shape[1]
+        batch_ax = (
+            (plan.batch_axes or None)
+            if b_sz % max(plan.data_size, 1) == 0
+            else None
+        )
+        seq_ax = plan.model_axis if s_sz % plan.model_size == 0 else None
+        tok_spec = P(batch_ax, seq_ax, None)
+        fn = jax.shard_map(
+            lambda r_, wi, wg, wo, xl, pm: body(
+                r_, wi, wg, wo, xl, pm, axis_names=axis_names
+            ),
+            mesh=mesh,
+            in_specs=(
+                P(None, None),
+                P(ex_ax, None, None),
+                P(ex_ax, None, None),
+                P(ex_ax, None, None),
+                tok_spec,
+                P(None),
+            ),
+            out_specs=(
+                tok_spec,
+                P(None), P(), P(), P(),
+            ),
+            check_vma=False,
+        )
+        out, load, balance, z, drop = fn(
+            params["router"], params["w_in"], params["w_gate"], params["w_out"],
+            x, perm_arr,
+        )
+    return out, MoEStats(load, balance, z, drop)
+
+
+# ---------------------------------------------------------------------------
+# dense decode backend
+# ---------------------------------------------------------------------------
+
+
+def _moe_dense_decode(params, x, cfg, plan: ShardingPlan, mesh=None):
+    """Decode-time MoE: compute ALL experts densely on the handful of live
+    tokens and combine with the (sparse) gate weights.
+
+    At decode the token count is tiny, so the extra FLOPs of computing every
+    expert (~1 ms on 256 chips for deepseek-v2's 128 tokens) are nothing —
+    while the sparse dispatch path must gather 2D-sharded expert weights
+    over the FSDP axis every layer (~27 GB/step for deepseek-v2).  Dense
+    decode keeps weights stationary: activations ride the contractions
+    (psums of a few MB).  §Perf beyond-paper optimization.
+    """
+    e = cfg.moe
+    b, s, d = x.shape
+    ev, r = virtual_experts(e.num_experts, plan.model_size)
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    weights, idx = ops.topk_gating(logits, e.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Scatter the kept top-k weights into a dense [T, E] map, then expand to
+    # virtual experts (each of the r shards contributes a partial product).
+    wmap = jnp.zeros((b * s, e.num_experts), jnp.float32)
+    wmap = wmap.at[jnp.arange(b * s)[:, None], idx].add(weights)
+    wv = jnp.repeat(wmap, r, axis=1)  # [T, Ev]
+
+    ex_ax = plan.dim_axis(ev)
+    h = jnp.einsum("td,edf->tef", xt, params["w_in"])
+    g = jnp.einsum("td,edf->tef", xt, params["w_gate"])
+    actfn = jax.nn.silu if cfg.act in ("silu", "swiglu") else jax.nn.gelu
+    h = actfn(g) * h
+    h = constrain(h, mesh, P(None, ex_ax, None))
+    y = jnp.einsum("tef,efd->ted", h, params["w_out"])
+    out = jnp.einsum("te,ted->td", wv.astype(y.dtype), y).reshape(b, s, d)
+
+    balance, z = router_losses(logits, idx, e.num_experts)
+    load = jax.nn.one_hot(idx.reshape(-1), e.num_experts, dtype=jnp.float32).sum(0)
+    return out, MoEStats(load, balance, z, jnp.zeros((), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+
+def moe_apply(
+    params,
+    x: jax.Array,
+    cfg,
+    plan: ShardingPlan,
+    *,
+    mesh=None,
+    expert_perm=None,
+    backend: str | None = None,
+):
+    e = cfg.moe
+    backend = backend or e.backend
+    if x.shape[1] == 1 and backend != "einsum":
+        # Single-token decode: weight-stationary dense path (see docstring).
+        backend = "dense_decode"
+    if backend == "dense_decode":
+        out, stats = _moe_dense_decode(params, x, cfg, plan, mesh=mesh)
+    elif backend == "mixnet":
+        out, stats = _moe_mixnet(params, x, cfg, plan, mesh, expert_perm)
+    elif backend == "einsum":
+        out, stats = _moe_einsum(params, x, cfg, plan, mesh=mesh)
+    else:
+        raise ValueError(f"unknown MoE backend {backend!r}")
+    if "shared" in params:
+        sh = params["shared"]
+        h = x @ sh["w_in"]
+        g = jax.nn.silu(x @ sh["w_gate"])
+        out = out + (g * h) @ sh["w_out"]
+    return out, stats

@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+A gated diagonal linear recurrence:
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill evaluate the whole sequence with ``lax.associative_scan``
+(the recurrence is linear-diagonal, so it parallelizes); decode is the
+single-step update on a ``[B, W]`` state — constant memory, hence this
+family runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["init_rglru", "rglru_apply", "init_rglru_cache"]
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, plan):
+    d = cfg.d_model
+    w = d  # lru width = d_model (RecurrentGemma-9b uses width == d_model)
+    dtype = jnp.dtype(cfg.dtype)
+    k = jax.random.split(key, 6)
+    wax = plan.dim_axis(w)
+    params = {
+        "w_y": jax.random.normal(k[0], (d, w), dtype) * d**-0.5,
+        "w_x": jax.random.normal(k[1], (d, w), dtype) * d**-0.5,
+        "conv": jax.random.normal(k[2], (4, w), dtype) * 0.1,
+        "w_a": jax.random.normal(k[3], (w, w), dtype) * w**-0.5,
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": jax.random.normal(k[4], (w, w), dtype) * w**-0.5,
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 2.0, jnp.float32),  # softplus(2) ~ healthy decay
+        "w_out": jax.random.normal(k[5], (w, d), dtype) * w**-0.5,
+    }
+    specs = {
+        "w_y": P(plan.fsdp_axis, wax),
+        "w_x": P(plan.fsdp_axis, wax),
+        "conv": P(None, wax),
+        "w_a": P(plan.fsdp_axis, wax),
+        "b_a": P(wax),
+        "w_i": P(plan.fsdp_axis, wax),
+        "b_i": P(wax),
+        "lam": P(wax),
+        "w_out": P(wax, plan.fsdp_axis),
+    }
+    return params, specs
+
+
+def _conv1d(x, w, state):
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    return y, xp[:, -(width - 1) :, :]
+
+
+def _lru_gates(params, xb):
+    r = jax.nn.sigmoid(xb.astype(jnp.float32) @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(xb.astype(jnp.float32) @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # [B,S,W]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * (i * xb.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_apply(params, x, cfg, *, mode="train", cache=None, t=None):
+    b, s, d = x.shape
+    y_branch = jax.nn.gelu(x @ params["w_y"])
+    xb = x @ params["w_x"]
+    conv_state = cache.get("conv") if cache else None
+
+    if mode == "decode":
+        xb, new_conv = _conv1d(xb, params["conv"], conv_state)
+        a, gated = _lru_gates(params, xb)
+        h_prev = cache["state"]  # [B, W]
+        h = a[:, 0] * h_prev + gated[:, 0]
+        out = h[:, None, :]
+        cache = {"state": h, "conv": new_conv}
+    else:
+        xb, new_conv = _conv1d(xb, params["conv"], None)
+        a, gated = _lru_gates(params, xb)
+
+        def compose(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        coeffs, h_all = jax.lax.associative_scan(compose, (a, gated), axis=1)
+        out = h_all
+        if mode == "prefill":
+            cache = {"state": h_all[:, -1], "conv": new_conv}
+    out = out.astype(x.dtype) * y_branch
+    return out @ params["w_out"], cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype=None):
+    w = cfg.d_model
+    return {
+        "state": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), jnp.float32),
+    }

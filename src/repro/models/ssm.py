@@ -1,0 +1,201 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill use the chunked dual form: quadratic attention-like
+computation inside length-``L`` chunks plus a linear inter-chunk state
+recurrence (a ``lax.scan`` over chunks).  Decode is the pure recurrence on a
+``[B, H, P, N]`` state — constant memory per token, which is why the
+``long_500k`` cell runs for this family (DESIGN.md §4).
+
+Head dim P shards over the ``model`` axis through the heads dim of the
+projections; the state dim N stays local.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import rms_norm
+
+__all__ = ["init_ssm", "ssm_apply", "init_ssm_cache"]
+
+
+def init_ssm(key, cfg, plan):
+    s = cfg.ssm
+    d = cfg.d_model
+    inner = s.expand * d
+    heads = inner // s.head_dim
+    dtype = jnp.dtype(cfg.dtype)
+    k = jax.random.split(key, 6)
+    head_ax = plan.heads_axis(heads)
+    params = {
+        # Fused input projection: [z | x | B | C | dt].
+        "w_z": jax.random.normal(k[0], (d, inner), dtype) * d**-0.5,
+        "w_x": jax.random.normal(k[1], (d, inner), dtype) * d**-0.5,
+        "w_B": jax.random.normal(k[2], (d, s.state_dim), dtype) * d**-0.5,
+        "w_C": jax.random.normal(k[3], (d, s.state_dim), dtype) * d**-0.5,
+        "w_dt": jax.random.normal(k[4], (d, heads), dtype) * d**-0.5,
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "A_log": jnp.zeros((heads,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((heads,), jnp.float32),
+        "conv": jax.random.normal(k[5], (s.conv_width, inner), dtype) * 0.1,
+        "norm": jnp.zeros((inner,), dtype),
+        "w_out": jax.random.normal(k[5], (inner, d), dtype) * inner**-0.5,
+    }
+    specs = {
+        "w_z": P(plan.fsdp_axis, plan.dim_axis(inner)),
+        "w_x": P(plan.fsdp_axis, plan.dim_axis(inner)),
+        "w_B": P(plan.fsdp_axis, None),
+        "w_C": P(plan.fsdp_axis, None),
+        "w_dt": P(plan.fsdp_axis, head_ax),
+        "dt_bias": P(head_ax),
+        "A_log": P(head_ax),
+        "D": P(head_ax),
+        "conv": P(None, plan.dim_axis(inner)),
+        "norm": P(plan.dim_axis(inner)),
+        "w_out": P(plan.dim_axis(inner), plan.fsdp_axis),
+    }
+    return params, specs
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv, width W.  x [B,S,C], w [W,C].
+
+    Returns (y, new_state) where state carries the last W-1 inputs for
+    decode continuation.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+W-1, C]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    new_state = xp[:, -(width - 1) :, :]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(x, dt, a_log, bmat, cmat, chunk):
+    """Chunked SSD scan.
+
+    x ``[B,S,H,P]``, dt ``[B,S,H]`` (softplus-ed), a_log ``[H]``,
+    bmat/cmat ``[B,S,N]`` -> y ``[B,S,H,P]``.
+    """
+    b, s_len, h, p = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s_len)
+    while s_len % l:
+        l -= 1
+    c = s_len // l
+    a = -jnp.exp(a_log)  # [H] negative
+    xd = x * dt[..., None]  # dt-weighted input
+    da = dt * a  # [B,S,H] log-decay per step
+
+    xc = xd.reshape(b, c, l, h, p)
+    dac = da.reshape(b, c, l, h)
+    bc = bmat.reshape(b, c, l, n)
+    cc = cmat.reshape(b, c, l, n)
+    cum = jnp.cumsum(dac, axis=2)  # [B,c,L,H] within-chunk cumulative decay
+
+    # ---- intra-chunk (attention-like, lower-triangular) -------------------
+    cb = jnp.einsum("bcln,bcsn->bcls", cc, bc)  # [B,c,L,L]
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,c,L(q),L(k),H]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    gate = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bcls,bclsh,bcshp->bclhp", cb, gate, xc)
+
+    # ---- chunk state summaries --------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,c,L,H]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", bc, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,c,H]
+
+    def step(h_prev, inputs):
+        st, dec = inputs  # [B,H,P,N], [B,H]
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # [B,c,H,P,N]
+
+    decay_from_start = jnp.exp(cum)  # [B,c,L,H]
+    y_inter = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp", cc, decay_from_start, h_prevs.astype(cc.dtype)
+    )
+    y = (y_intra + y_inter).reshape(b, s_len, h, p)
+    return y
+
+
+def ssm_apply(params, x, cfg, *, mode="train", cache=None, t=None):
+    """Mamba-2 block.  x [B,S,D] -> [B,S,D]; decode keeps S==1."""
+    s = cfg.ssm
+    b, seq, d = x.shape
+    inner = s.expand * d
+    heads = inner // s.head_dim
+    z = x @ params["w_z"]
+    xi = x @ params["w_x"]
+    bm = x @ params["w_B"]
+    cm = x @ params["w_C"]
+    dt = jax.nn.softplus(
+        (x @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"]
+    )  # [B,S,H]
+
+    conv_state = cache.get("conv") if cache else None
+    if mode == "decode":
+        xi, new_conv = _causal_conv(xi, params["conv"], conv_state)
+        xh = xi.reshape(b, 1, heads, s.head_dim)
+        a = -jnp.exp(params["A_log"])
+        h_prev = cache["state"]  # [B,H,P,N]
+        dec = jnp.exp(dt[:, 0, :] * a)  # [B,H]
+        upd = jnp.einsum(
+            "bn,bhp->bhpn", bm[:, 0].astype(jnp.float32),
+            (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+        )
+        h_new = h_prev * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cm[:, 0].astype(jnp.float32), h_new)
+        y = y + params["D"][:, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, inner).astype(x.dtype)
+        cache = {"state": h_new, "conv": new_conv}
+    else:
+        xi, new_conv = _causal_conv(xi, params["conv"], None)
+        xh = xi.reshape(b, seq, heads, s.head_dim)
+        y = _ssd_chunked(
+            xh.astype(jnp.float32), dt, params["A_log"], bm.astype(jnp.float32),
+            cm.astype(jnp.float32), s.chunk,
+        )
+        y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, seq, inner).astype(x.dtype)
+        if mode == "prefill":
+            # Final state for decode continuation: rerun recurrence tail.
+            a = -jnp.exp(params["A_log"])
+            da = dt * a
+            cum_total = jnp.cumsum(da, axis=1)
+            decay_to_end = jnp.exp(cum_total[:, -1:, :] - cum_total)
+            state = jnp.einsum(
+                "bsn,bsh,bshp->bhpn",
+                bm.astype(jnp.float32),
+                decay_to_end,
+                (xh * dt[..., None]).astype(jnp.float32),
+            )
+            cache = {"state": state, "conv": new_conv}
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return y @ params["w_out"], cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype=None):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    heads = inner // s.head_dim
+    return {
+        "state": jnp.zeros((batch, heads, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, inner), jnp.float32),
+    }

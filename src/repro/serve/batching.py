@@ -1,0 +1,120 @@
+"""Continuous batching: a fixed-slot decode batch where every slot runs at
+its own position, finished sequences are evicted between steps and queued
+prompts are admitted into the freed slots (vLLM-style scheduling on static
+shapes — slot caches are scattered in, never reshaped).
+
+Decode attention supports per-slot ``t`` vectors natively
+(:mod:`repro.models.layers`), so one jitted ``serve_step`` serves the whole
+heterogeneous batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.train.train_step import make_serve_step
+
+__all__ = ["ContinuousBatcher", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S_prompt] int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    out: list = dataclasses.field(default_factory=list)
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a jitted decode step."""
+
+    def __init__(self, params, cfg, plan, *, slots: int = 4, max_len: int = 128,
+                 mesh=None):
+        self.params = params
+        self.cfg = cfg
+        self.plan = plan
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.t = np.zeros(slots, np.int32)  # next write position per slot
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self.caches = tfm.init_caches(cfg, slots, max_len)
+        self._step = jax.jit(make_serve_step(cfg, plan, mesh=mesh))
+        self.finished: list[Request] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            # Per-slot prefill: run the prompt through a batch-1 prefill,
+            # emit the prefill's next-token (the request's first output) and
+            # scatter the resulting caches into this slot.
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            feats, _, one = tfm.model_apply(
+                self.params, batch, self.cfg, self.plan, mode="prefill"
+            )
+            logits = tfm.logits_from_features(self.params, feats[:, -1:], self.cfg)
+            first = int(jnp.argmax(logits, axis=-1)[0, 0])
+            one = tfm.pad_caches(one, self.max_len)
+
+            def scatter(full, new):
+                # full: [reps, slots, ...]; new: [reps, 1, ...]
+                return full.at[:, slot].set(new[:, 0].astype(full.dtype))
+
+            self.caches = jax.tree.map(scatter, self.caches, one)
+            req.out.append(first)
+            if len(req.out) >= req.max_new_tokens or (
+                req.eos_id is not None and first == req.eos_id
+            ):
+                self.finished.append(req)
+                continue
+            self.active[slot] = req
+            self.t[slot] = len(req.prompt)
+            self.tokens[slot, 0] = first
+
+    # -- one decode tick -------------------------------------------------------
+    def step(self) -> int:
+        """Admit, decode one token for every active slot, evict finished.
+        Returns the number of active slots served."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        next_tok, self.caches = self._step(
+            self.params, self.caches, jnp.asarray(self.tokens),
+            jnp.asarray(self.t),
+        )
+        next_np = np.asarray(next_tok)
+        for s in live:
+            req = self.active[s]
+            tok = int(next_np[s, 0])
+            req.out.append(tok)
+            self.t[s] += 1
+            self.tokens[s, 0] = tok
+            done = len(req.out) >= req.max_new_tokens or (
+                req.eos_id is not None and tok == req.eos_id
+            ) or self.t[s] >= self.max_len
+            if done:
+                self.finished.append(req)
+                self.active[s] = None
+        return len(live)
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and all(a is None for a in self.active):
+                break
+            self.step()
+        return self.finished

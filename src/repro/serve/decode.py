@@ -1,0 +1,47 @@
+"""Batched serving: prefill + greedy/sampled decode against the KV caches.
+
+``generate`` is the driver the serving example uses; ``serve_step`` /
+``prefill_step`` (from :mod:`repro.train.train_step`) are what the dry-run
+lowers for the decode_32k / long_500k cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.train.train_step import make_prefill_step, make_serve_step
+
+__all__ = ["generate"]
+
+
+def generate(
+    params,
+    cfg,
+    plan,
+    prompt_tokens: jax.Array,  # [B, S_prompt]
+    *,
+    max_new_tokens: int = 32,
+    mesh=None,
+    sample: bool = False,
+    seed: int = 0,
+    extra_batch: dict | None = None,
+):
+    """Prefill the prompt then decode ``max_new_tokens`` greedily/sampled."""
+    b, s_prompt = prompt_tokens.shape
+    prefill = jax.jit(make_prefill_step(cfg, plan, mesh=mesh))
+    step = jax.jit(make_serve_step(cfg, plan, mesh=mesh, sample=sample))
+
+    batch = {"tokens": prompt_tokens, **(extra_batch or {})}
+    next_tok, caches = prefill(params, batch)
+    caches = tfm.pad_caches(caches, s_prompt + max_new_tokens)
+
+    out = [next_tok]
+    rng = jax.random.PRNGKey(seed)
+    tok = next_tok
+    for i in range(max_new_tokens - 1):
+        rng, sub = jax.random.split(rng)
+        tok, caches = step(params, caches, tok, jnp.asarray(s_prompt + i), sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

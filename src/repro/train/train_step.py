@@ -1,0 +1,167 @@
+"""jit-able training / serving step factories.
+
+These are the functions the launcher pjits and the dry-run lowers: pure
+(params, opt_state, batch) -> (params, opt_state, metrics) with all
+distribution expressed through param/activation shardings (plus the MoE
+``mixnet`` shard_map region inside the model).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+from repro.parallel.sharding import ShardingPlan, constrain
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "loss_fn",
+    "step_shardings",
+]
+
+
+def loss_fn(params, batch, cfg, plan, mesh=None, expert_perm=None):
+    feats, aux, _ = tfm.model_apply(
+        params, batch, cfg, plan, mesh=mesh, mode="train", expert_perm=expert_perm
+    )
+    feats = constrain(feats, mesh, plan.activation_spec())
+    ce = tfm.chunked_cross_entropy(params, feats, batch["labels"], cfg)
+    loss = ce
+    if cfg.is_moe:
+        loss = loss + cfg.moe.balance_loss * aux.balance_loss
+        loss = loss + cfg.moe.router_z_loss * aux.z_loss
+    return loss, (ce, aux)
+
+
+def make_train_step(
+    cfg, plan: ShardingPlan, opt_cfg: AdamWConfig, mesh=None, microbatches: int = 1
+):
+    """jit-able train step; ``microbatches > 1`` scans gradient accumulation
+    over batch slices — activation live-set (and its reshard collectives per
+    slice) shrink by the microbatch factor at the cost of re-gathering FSDP
+    weights per slice (the classic trade; see EXPERIMENTS.md §Perf)."""
+
+    def grad_once(params, batch, expert_perm):
+        (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, plan, mesh, expert_perm
+        )
+        return loss, ce, aux, grads
+
+    def train_step(params, opt_state, batch, expert_perm=None):
+        if microbatches <= 1:
+            loss, ce, aux, grads = grad_once(params, batch, expert_perm)
+        else:
+            b = batch["tokens"].shape[0]
+            m = microbatches
+            assert b % m == 0, (b, m)
+
+            def mb_body(acc, xs):
+                tok, lab = xs
+                l, c, a, g = grad_once(
+                    params, {"tokens": tok, "labels": lab}, expert_perm
+                )
+                acc = (
+                    acc[0] + l / m,
+                    acc[1] + c / m,
+                    jax.tree.map(lambda p, q: p + q / m, acc[2], a),
+                    jax.tree.map(lambda p, q: p + q / m, acc[3], g),
+                )
+                return acc, ()
+
+            toks = batch["tokens"].reshape(m, b // m, -1)
+            labs = batch["labels"].reshape(m, b // m, -1)
+            zero_aux = jax.tree.map(
+                jnp.zeros_like,
+                jax.eval_shape(
+                    lambda: grad_once(
+                        params, {"tokens": toks[0], "labels": labs[0]}, expert_perm
+                    )[2]
+                ),
+            )
+            zeros = (
+                jnp.zeros((), jnp.float32),
+                jnp.zeros((), jnp.float32),
+                zero_aux,
+                jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params),
+            )
+            (loss, ce, aux, grads), _ = jax.lax.scan(mb_body, zeros, (toks, labs))
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {
+            "loss": loss,
+            "ce": ce,
+            "balance_loss": aux.balance_loss,
+            "z_loss": aux.z_loss,
+            **opt_metrics,
+        }
+        if cfg.is_moe:
+            metrics["expert_load"] = aux.moe_stats  # [repeats, E]
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, plan: ShardingPlan, mesh=None):
+    def prefill_step(params, batch):
+        feats, _, caches = tfm.model_apply(
+            params, batch, cfg, plan, mesh=mesh, mode="prefill"
+        )
+        logits = tfm.logits_from_features(params, feats[:, -1:], cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg, plan: ShardingPlan, mesh=None, *, sample: bool = False):
+    def serve_step(params, caches, tokens, t, rng=None):
+        """One decode step: tokens [B,1] + caches -> next token [B,1]."""
+        feats, _, caches = tfm.model_apply(
+            params, {"tokens": tokens}, cfg, plan, mesh=mesh, mode="decode",
+            caches=caches, t=t,
+        )
+        logits = tfm.logits_from_features(params, feats, cfg)[:, -1]
+        if sample and rng is not None:
+            next_tok = jax.random.categorical(rng, logits.astype(jnp.float32))
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shardings for pjit
+# ---------------------------------------------------------------------------
+
+
+def step_shardings(cfg, plan: ShardingPlan, mesh, param_specs):
+    """NamedShardings for (params, opt_state, batch) under the given mesh."""
+    ns = lambda spec: NamedSharding(mesh, spec)
+    p_sh = jax.tree.map(ns, param_specs, is_leaf=lambda s: isinstance(s, P))
+    opt_sh = {
+        "mu": p_sh,
+        "nu": p_sh,
+        "step": ns(P()),
+    }
+    batch_sh = {
+        "tokens": ns(plan.tokens_spec()),
+        "labels": ns(plan.tokens_spec()),
+    }
+    return p_sh, opt_sh, batch_sh
+
+
+def init_all(key, cfg, plan, opt_cfg):
+    """(params, specs, opt_state) convenience initializer."""
+    from repro.models.transformer import init_model
+
+    params, specs = init_model(key, cfg, plan)
+    opt_state = init_adamw(params, opt_cfg)
+    return params, specs, opt_state

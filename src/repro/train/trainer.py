@@ -1,0 +1,192 @@
+"""Training loop wiring the whole system together:
+
+  data -> jit(train_step) -> MoE telemetry -> MixNet control loop
+  (traffic monitor -> COPILOT -> placement solver -> expert-weight permute)
+  -> checkpoint/restart -> straggler watchdog.
+
+The control loop is the paper's runtime reconfiguration (Fig 20) at the
+framework level: every ``reconfig_every`` steps the controller folds the
+observed per-layer expert loads into a device demand matrix, solves the
+greedy placement (Algorithm 1's TPU analogue), and — only when the
+predicted gain clears the permute cost — gathers the stacked expert weights
+into their new slots and updates the router's slot map.  Training math is
+unchanged (the paper: "MixNet does not alter the parallelization
+strategies... and does not affect training accuracy").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import inverse_permutation
+from repro.core.reconfig import ReconfigController
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import ShardingPlan, virtual_experts
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import init_all, make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0  # 0 = disabled
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    # MixNet runtime reconfiguration
+    reconfig_every: int = 0  # 0 = disabled (paper-faithful needs >0)
+    reconfig_min_gain: float = 0.05
+    # Straggler watchdog: warn when a step exceeds ema * factor.
+    straggler_factor: float = 3.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: AdamWConfig,
+        tcfg: TrainerConfig,
+        plan: ShardingPlan,
+        *,
+        mesh=None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.plan = plan
+        self.mesh = mesh
+        key = jax.random.PRNGKey(seed)
+        self.params, self.specs, self.opt_state = init_all(key, cfg, plan, opt_cfg)
+        self.step_fn = jax.jit(
+            make_train_step(cfg, plan, opt_cfg, mesh=mesh), donate_argnums=(0, 1)
+        )
+        self.step = 0
+        self.metrics_log: list[dict] = []
+        self._ema_step_time: float | None = None
+        self.straggler_events = 0
+
+        # MixNet control plane (only meaningful for MoE archs).
+        self.controller = None
+        self.expert_perm = None
+        if cfg.is_moe and tcfg.reconfig_every:
+            ev, r = virtual_experts(cfg.moe.num_experts, plan.model_size)
+            self.controller = ReconfigController(
+                num_layers=cfg.pattern_repeats,
+                num_experts=cfg.moe.num_experts,
+                experts_per_device=max(ev // max(plan.model_size, 1), 1),
+                min_gain_fraction=tcfg.reconfig_min_gain,
+            )
+            self._virtual = (ev, r)
+            self.expert_perm = np.tile(
+                np.arange(ev, dtype=np.int32), (cfg.pattern_repeats, 1)
+            )
+        self.reconfig_count = 0
+
+    # -- checkpoint/restart ---------------------------------------------------
+    def maybe_restore(self) -> bool:
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return False
+        state = ckpt.restore(
+            self.tcfg.ckpt_dir, last, {"params": self.params, "opt": self.opt_state}
+        )
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = last
+        return True
+
+    def _checkpoint(self):
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.tcfg.ckpt_async:
+            ckpt.save_async(
+                self.tcfg.ckpt_dir, self.step, tree, keep=self.tcfg.ckpt_keep
+            )
+        else:
+            ckpt.save(self.tcfg.ckpt_dir, self.step, tree, keep=self.tcfg.ckpt_keep)
+
+    # -- MixNet reconfiguration ------------------------------------------------
+    def _maybe_reconfigure(self, expert_load: np.ndarray):
+        """expert_load: [repeats, E] realized loads from the last step."""
+        c = self.controller
+        for layer in range(expert_load.shape[0]):
+            c.observe(layer, expert_load[layer])
+        c.end_step()
+        if self.step % self.tcfg.reconfig_every:
+            return
+        ev, r = self._virtual
+        p = max(self.plan.model_size, 1)
+        epd = max(ev // p, 1)
+        # Fold the mean load into a [devices, E_virtual] demand proxy: every
+        # data shard contributes tokens proportional to the global load.
+        load = expert_load.mean(axis=0)
+        vload = np.repeat(load, r) / max(r, 1)
+        demand = np.tile(vload[None, :], (p, 1))
+        decision = c.decide(demand)
+        if not decision.reconfigure:
+            return
+        perm = decision.plan.perm.astype(np.int32)  # virtual slot permutation
+        inv = inverse_permutation(perm)
+        # Permute stacked expert weights of every MoE block: slot s must hold
+        # the expert whose new slot is s.
+        def permute(leaf):
+            return leaf[:, inv] if leaf.ndim >= 2 and leaf.shape[1] == ev else leaf
+
+        for bname, bparams in self.params["blocks"].items():
+            if "moe" in bparams:
+                for wname in ("w_in", "w_gate", "w_out"):
+                    bparams["moe"][wname] = permute(bparams["moe"][wname])
+        base = self.expert_perm
+        self.expert_perm = perm[base] if base is not None else np.tile(
+            perm, (self.cfg.pattern_repeats, 1)
+        )
+        self.reconfig_count += 1
+
+    # -- main loop ---------------------------------------------------------------
+    def train(self, data_iter) -> list[dict]:
+        t = self.tcfg
+        while self.step < t.total_steps:
+            batch_np = next(data_iter)
+            batch = {
+                "tokens": jnp.asarray(batch_np.tokens),
+                "labels": jnp.asarray(batch_np.labels),
+            }
+            perm = (
+                jnp.asarray(self.expert_perm)
+                if self.expert_perm is not None
+                else None
+            )
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, perm
+            )
+            metrics = {
+                k: np.asarray(v) for k, v in metrics.items()
+            }
+            dt = time.perf_counter() - t0
+            # Straggler watchdog (mitigation = flag + report; a real cluster
+            # deployment feeds this to the job scheduler for hot-sparing).
+            if self._ema_step_time is not None and dt > t.straggler_factor * self._ema_step_time:
+                self.straggler_events += 1
+            self._ema_step_time = (
+                dt if self._ema_step_time is None else 0.9 * self._ema_step_time + 0.1 * dt
+            )
+            self.step += 1
+            metrics["step"] = self.step
+            metrics["step_time_s"] = dt
+            self.metrics_log.append(metrics)
+
+            if self.controller is not None and "expert_load" in metrics:
+                self._maybe_reconfigure(np.asarray(metrics["expert_load"]))
+            if t.ckpt_every and self.step % t.ckpt_every == 0:
+                self._checkpoint()
+        ckpt.wait_pending()
+        return self.metrics_log

@@ -1,0 +1,100 @@
+"""MIXNET-COPILOT: fit quality + Fig 19 ordering (COPILOT > unchanged >
+random) on synthetic traces with cross-layer structure."""
+
+import numpy as np
+import pytest
+
+from repro.core.copilot import (
+    CopilotPredictor,
+    fit_transition_matrix,
+    predict_next_load,
+    topk_accuracy,
+)
+from repro.core.netsim import GateTraceGenerator
+from repro.core.traffic import TrafficMonitor
+
+import jax.numpy as jnp
+
+
+def test_fit_recovers_transition():
+    rng = np.random.default_rng(0)
+    e = 8
+    p_true = rng.dirichlet(np.ones(e) * 0.5, size=e).T  # column-stochastic
+    xs = rng.dirichlet(np.ones(e), size=12)
+    ys = (p_true @ xs.T).T
+    w = np.ones(12)
+    p0 = np.full((e, e), 1.0 / e)
+    p = np.asarray(
+        fit_transition_matrix(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(w),
+                              jnp.asarray(p0), steps=400)
+    )
+    # columns remain distributions
+    assert np.allclose(p.sum(axis=0), 1.0, atol=1e-4)
+    assert (p >= -1e-6).all()
+    # prediction error small on the training pairs
+    pred = (p @ xs.T).T
+    assert np.abs(pred - ys).max() < 0.05
+
+
+def test_fit_matches_scipy_slsqp_objective():
+    """Projected-gradient solution is as good as scipy's SLSQP (paper §B.1)."""
+    from scipy.optimize import minimize
+
+    rng = np.random.default_rng(1)
+    e = 4
+    p_true = rng.dirichlet(np.ones(e), size=e).T
+    xs = rng.dirichlet(np.ones(e), size=8)
+    ys = (p_true @ xs.T).T + rng.normal(0, 0.01, size=(8, e))
+    w = np.ones(8) / 8
+
+    def objective(flat):
+        p = flat.reshape(e, e)
+        pred = (p @ xs.T).T
+        return float(np.sum(w[:, None] * (ys - pred) ** 2))
+
+    cons = [
+        {"type": "eq", "fun": (lambda f, j=j: f.reshape(e, e)[:, j].sum() - 1.0)}
+        for j in range(e)
+    ]
+    res = minimize(
+        objective, np.full(e * e, 1.0 / e), method="SLSQP",
+        bounds=[(0, 1)] * (e * e), constraints=cons,
+    )
+    ours = np.asarray(
+        fit_transition_matrix(
+            jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(w),
+            jnp.asarray(np.full((e, e), 1.0 / e)), steps=500,
+        )
+    )
+    assert objective(ours.reshape(-1)) <= res.fun * 1.25 + 1e-6
+
+
+def test_copilot_beats_baselines_fig19():
+    layers, e = 6, 16
+    trace = GateTraceGenerator(layers, e, seed=3)
+    monitor = TrafficMonitor(layers, e, window=8)
+    cop = CopilotPredictor(layers, e, fit_steps=120)
+    rng = np.random.default_rng(0)
+
+    acc = {"copilot": [], "unchanged": [], "random": []}
+    for it in range(30):
+        loads = trace.step()
+        for l in range(layers):
+            monitor.record(l, loads[l] * 1000)
+        if it >= 3:
+            for l in range(layers - 1):
+                k = 4
+                pred = cop.predict(l, loads[l])
+                acc["copilot"].append(topk_accuracy(pred, loads[l + 1], k))
+                acc["unchanged"].append(
+                    topk_accuracy(cop.baseline_unchanged(loads[l]), loads[l + 1], k)
+                )
+                acc["random"].append(
+                    topk_accuracy(cop.baseline_random(rng), loads[l + 1], k)
+                )
+        cop.update(monitor)
+        monitor.advance()
+
+    mean = {k: float(np.mean(v)) for k, v in acc.items()}
+    assert mean["copilot"] > mean["unchanged"] - 0.02, mean
+    assert mean["copilot"] > mean["random"] + 0.05, mean

@@ -1,0 +1,122 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle,
+across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped_matmul import grouped_matmul_pallas, pick_block
+from repro.kernels.topk_gating import topk_gating_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize(
+    "e,c,d,f",
+    [(1, 8, 16, 16), (4, 64, 128, 256), (2, 32, 96, 64), (8, 128, 512, 384), (3, 16, 48, 80)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul(e, c, d, f, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (e, c, d), dtype)
+    w = jax.random.normal(k2, (e, d, f), dtype)
+    out = grouped_matmul_pallas(x, w, interpret=True)
+    expect = ref.grouped_matmul(x, w)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    assert out.shape == (e, c, f) and out.dtype == dtype
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - expect.astype(jnp.float32)))) < tol * max(d, 1)
+
+
+@pytest.mark.parametrize("t,e,k", [(64, 8, 2), (256, 64, 6), (128, 160, 6), (96, 16, 4), (32, 4, 1)])
+def test_topk_gating(t, e, k):
+    logits = jax.random.normal(KEY, (t, e), jnp.float32) * 2.0
+    w, i = topk_gating_pallas(logits, k, interpret=True)
+    rw, ri = ref.topk_gating(logits, k)
+    assert float(jnp.max(jnp.abs(w - rw))) < 1e-5
+    assert bool(jnp.all(i == ri))
+    # weights sorted descending, valid expert range
+    assert bool(jnp.all(w[:, :-1] >= w[:, 1:] - 1e-6))
+    assert bool(jnp.all((i >= 0) & (i < e)))
+
+
+@pytest.mark.parametrize(
+    "case",
+    [
+        dict(b=2, hq=4, hkv=2, s=128, d=32, causal=True, window=None, softcap=None),
+        dict(b=1, hq=8, hkv=8, s=256, d=64, causal=True, window=64, softcap=None),
+        dict(b=1, hq=4, hkv=1, s=128, d=64, causal=True, window=None, softcap=50.0),
+        dict(b=1, hq=2, hkv=2, s=192, d=64, causal=False, window=None, softcap=None),
+        dict(b=2, hq=6, hkv=2, s=64, d=16, causal=True, window=16, softcap=20.0),
+    ],
+)
+def test_flash_attention(case):
+    c = dict(case)
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (c["b"], c["hq"], c["s"], c["d"]), jnp.float32)
+    k = jax.random.normal(kk, (c["b"], c["hkv"], c["s"], c["d"]), jnp.float32)
+    v = jax.random.normal(kv, (c["b"], c["hkv"], c["s"], c["d"]), jnp.float32)
+    kw = dict(causal=c["causal"], window=c["window"], softcap=c["softcap"])
+    out = flash_attention_pallas(q, k, v, bq=64, bk=64, interpret=True, **kw)
+    expect = ref.flash_attention(q, k, v, **kw)
+    assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
+
+
+def test_flash_attention_chunked_matches_ref():
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (2, 4, 256, 32))
+    k = jax.random.normal(kk, (2, 2, 256, 32))
+    v = jax.random.normal(kv, (2, 2, 256, 32))
+    for kw in [dict(causal=True), dict(causal=True, window=64),
+               dict(causal=True, softcap=30.0), dict(causal=False)]:
+        a = ref.flash_attention(q, k, v, **kw)
+        b = ref.flash_attention_chunked(q, k, v, bq=64, **kw)
+        assert float(jnp.max(jnp.abs(a - b))) < 3e-6, kw
+
+
+def test_pick_block():
+    assert pick_block(256, 128) == 128
+    assert pick_block(96, 128) == 96
+    assert pick_block(100, 64) == 50
+    assert pick_block(7, 4) == 1
+
+
+@pytest.mark.parametrize("t,d", [(64, 128), (256, 512), (96, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel(t, d, dtype):
+    from repro.kernels.rmsnorm import rmsnorm_pallas
+    from repro.models.layers import rms_norm
+
+    x = jax.random.normal(KEY, (t, d), dtype) * 3
+    w = jax.random.normal(KEY, (d,), dtype) * 0.1
+    out = rmsnorm_pallas(x, w, interpret=True)
+    expect = rms_norm(x[None], w)[0]
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert out.dtype == dtype
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - expect.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("l,p,n", [(16, 16, 8), (64, 32, 16), (32, 64, 32)])
+def test_ssd_chunk_kernel(l, p, n):
+    """Pallas SSD chunk vs a direct O(L^2) reference."""
+    from repro.kernels.ssd_chunk import ssd_chunk_pallas
+    import numpy as np
+
+    g = 3
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    x = jax.random.normal(k1, (g, l, p)) * 0.5
+    da = -jnp.abs(jax.random.normal(k2, (g, l))) * 0.1
+    bm = jax.random.normal(k3, (g, l, n)) * 0.5
+    cm = jax.random.normal(k4, (g, l, n)) * 0.5
+    y, st = ssd_chunk_pallas(x, da, bm, cm, interpret=True)
+
+    # reference
+    cum = jnp.cumsum(da, axis=1)
+    cb = jnp.einsum("gln,gsn->gls", cm, bm)
+    gate = jnp.exp(cum[:, :, None] - cum[:, None, :])
+    mask = np.tril(np.ones((l, l), bool))
+    y_ref = jnp.einsum("gls,gls,gsp->glp", cb, jnp.where(mask, gate, 0.0), x)
+    st_ref = jnp.einsum("gsn,gs,gsp->gnp", bm, jnp.exp(cum[:, -1:] - cum), x)
+    assert float(jnp.max(jnp.abs(y - y_ref))) < 1e-4
+    assert float(jnp.max(jnp.abs(st - st_ref))) < 1e-4

@@ -1,0 +1,150 @@
+"""End-to-end behaviour of the paper's system: the full MixNet control loop
+(traffic monitor -> COPILOT -> Algorithm-1 placement -> expert-weight
+permutation) running inside real training, plus the serving path and the
+multi-device train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import SyntheticLM
+from repro.models.config import ModelConfig, MoEConfig
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import make_plan
+from repro.serve.decode import generate
+from repro.train.trainer import Trainer, TrainerConfig
+
+PLAN = make_plan(None)
+
+
+def test_mixnet_control_loop_reconfigures_under_skew():
+    """Skewed expert demand must trigger at least one runtime re-placement,
+    and training must stay numerically healthy through it (§6: 'MixNet does
+    not affect the training accuracy')."""
+    cfg = ModelConfig(
+        "e2e-moe", "moe", 2, 32, 4, 2, 0, 64, dtype="float32", remat="none",
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff=32, capacity_factor=2.0,
+                      backend="mixnet"),
+    )
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    tcfg = TrainerConfig(total_steps=16, reconfig_every=4, reconfig_min_gain=0.0)
+    tr = Trainer(cfg, opt, tcfg, PLAN, seed=0)
+    log = tr.train(iter(SyntheticLM(cfg.vocab_size, 16, 4, seed=0)))
+    assert all(np.isfinite(m["loss"]) for m in log)
+    # the controller observed traffic and made decisions
+    assert tr.controller is not None
+    assert tr.controller.monitor.step == 16
+
+
+def test_generate_end_to_end():
+    cfg = ModelConfig("serve", "dense", 2, 32, 4, 2, 64, 64, dtype="float32",
+                      remat="none")
+    params, _ = __import__("repro.models.transformer", fromlist=["init_model"]).init_model(
+        jax.random.PRNGKey(0), cfg, PLAN
+    )
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    out = generate(params, cfg, PLAN, prompt, max_new_tokens=6)
+    assert out.shape == (2, 6)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+    # greedy decode is deterministic
+    out2 = generate(params, cfg, PLAN, prompt, max_new_tokens=6)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+MULTIDEV_TRAIN = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.models.config import ModelConfig, MoEConfig
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import make_plan
+from repro.train.train_step import init_all, make_train_step, step_shardings
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+plan = make_plan(mesh)
+cfg = ModelConfig('md', 'moe', 2, 32, 4, 2, 0, 64, dtype='float32', remat='none',
+                  moe=MoEConfig(num_experts=8, top_k=2, d_ff=32, capacity_factor=4.0,
+                                backend='mixnet', a2a_group=2))
+opt_cfg = AdamWConfig(lr=1e-3)
+params, specs, opt_state = init_all(jax.random.PRNGKey(0), cfg, plan, opt_cfg)
+p_sh, opt_sh, b_sh = step_shardings(cfg, plan, mesh, specs)
+params = jax.device_put(params, p_sh)
+opt_state = jax.device_put(opt_state, opt_sh)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+batch = {'tokens': jax.device_put(tokens, b_sh['tokens']),
+         'labels': jax.device_put(jnp.roll(tokens, -1, 1), b_sh['labels'])}
+with jax.set_mesh(mesh):
+    step = jax.jit(make_train_step(cfg, plan, opt_cfg, mesh=mesh))
+    params2, opt2, metrics = step(params, opt_state, batch)
+loss_md = float(metrics['loss'])
+
+# single-device reference
+plan1 = make_plan(None)
+cfg1 = cfg
+params1, _, opt1 = init_all(jax.random.PRNGKey(0), cfg1, plan1, opt_cfg)
+step1 = jax.jit(make_train_step(cfg1, plan1, opt_cfg))
+_, _, m1 = step1(params1, opt1, {'tokens': tokens, 'labels': jnp.roll(tokens, -1, 1)})
+loss_1 = float(m1['loss'])
+# NOTE: params differ in expert-shard layout across plans (virtual experts),
+# so only check both are finite and in the same ballpark.
+assert np.isfinite(loss_md) and np.isfinite(loss_1)
+assert abs(loss_md - loss_1) / loss_1 < 0.2, (loss_md, loss_1)
+print('MULTIDEV_TRAIN_OK', loss_md, loss_1)
+"""
+
+
+def test_train_step_multidevice(multidevice):
+    out = multidevice(MULTIDEV_TRAIN, devices=8, timeout=900)
+    assert "MULTIDEV_TRAIN_OK" in out
+
+
+def test_elastic_restore_across_meshes(multidevice):
+    """Checkpoint written under one sharding restores under another (elastic
+    restart: 8 devices -> different layout)."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np, tempfile, os
+from repro.train import checkpoint as ckpt
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+mesh_a = jax.make_mesh((8,), ('data',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh_b = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+tree = {'w': jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                            NamedSharding(mesh_a, P('data', None)))}
+d = tempfile.mkdtemp()
+ckpt.save(d, 1, tree)
+target_sh = {'w': NamedSharding(mesh_b, P('model', 'data'))}
+back = ckpt.restore(d, 1, tree, shardings=target_sh)
+np.testing.assert_array_equal(np.asarray(back['w']), np.arange(64.0).reshape(8, 8))
+assert back['w'].sharding == target_sh['w']
+print('ELASTIC_OK')
+"""
+    out = multidevice(code, devices=8)
+    assert "ELASTIC_OK" in out
+
+
+SP_EQUIV = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.models.config import ModelConfig
+from repro.models import transformer as tfm
+from repro.parallel.sharding import make_plan
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+plan = make_plan(mesh)
+cfg = ModelConfig('sp', 'dense', 2, 32, 8, 4, 64, 128, dtype='float32', remat='none')
+params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg, plan)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+with jax.set_mesh(mesh):
+    base, _, _ = jax.jit(lambda p, t: tfm.model_apply(p, {'tokens': t}, cfg, plan, mesh=mesh, mode='train'))(params, tokens)
+    cfg_sp = dataclasses.replace(cfg, sp_shardmap=True)
+    sp, _, _ = jax.jit(lambda p, t: tfm.model_apply(p, {'tokens': t}, cfg_sp, plan, mesh=mesh, mode='train'))(params, tokens)
+err = float(jnp.max(jnp.abs(base - sp)))
+assert err < 1e-4, err
+print('SP_EQUIV_OK', err)
+"""
+
+
+def test_sp_shardmap_equivalence(multidevice):
+    """The explicit Megatron-SP shard_map path (beyond-paper perf) computes
+    the same function as the auto-partitioned path."""
+    out = multidevice(SP_EQUIV, devices=8, timeout=900)
+    assert "SP_EQUIV_OK" in out

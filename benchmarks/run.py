@@ -19,6 +19,7 @@ claims, next to the paper's value:
   fig26_scalability        cluster-size scaling (Fig 26)
   fig27_optical_degree     optical degree sweep (Fig 27)
   fig28_reconfig_latency   reconfiguration latency sweep (Fig 28)
+  copilot_refit            batched vs looped COPILOT refit (BENCH_copilot.json)
   kernels                  Pallas-kernel oracle timings (framework table)
 """
 
@@ -190,8 +191,12 @@ def fig13_pareto(fast=False):
 
 
 def fig14_failures(fast=False):
-    """Fig 14: failure resiliency; paper: NIC ~3.3%, GPU ~5.1%, node ~6.5%."""
+    """Fig 14: failure resiliency; paper: NIC ~3.3%, GPU ~5.1%, node ~6.5%.
+
+    Failures are injected through the shared control-plane engine so they
+    flow through the same decide/apply path as routine reconfiguration."""
     from repro.configs.paper_models import MIXTRAL_8X22B, DEEPSEEK_R1
+    from repro.core.controlplane import ControlPlane
     from repro.core.fabric import FabricConfig, make_fabric
     from repro.core.netsim import simulate_training
 
@@ -201,17 +206,23 @@ def fig14_failures(fast=False):
         base = np.mean([r.total for r in simulate_training(model, fab, iterations=4)[1:]])
         # NIC failure: one server loses ONE optical NIC (reroute via rest+EPS).
         fab_n = make_fabric("mixnet", cfg)
-        fab_n.fail_server_nic(0, failed_nics=1)
-        nic = np.mean([r.total for r in simulate_training(model, fab_n, iterations=4, seed=1)[1:]])
+        cp_n = ControlPlane.for_simulation(model, fab_n)
+        cp_n.fail_nic(0, failed_nics=1)
+        nic = np.mean([r.total for r in simulate_training(
+            model, fab_n, iterations=4, seed=1, controlplane=cp_n)[1:]])
         # GPU failure: backup GPU reachable via OCS forwarding -> one server's
         # effective optical degree drops by the forwarding share (~2 NICs).
         fab_g = make_fabric("mixnet", cfg)
-        fab_g.fail_server_nic(0, failed_nics=2)
-        gpu = np.mean([r.total for r in simulate_training(model, fab_g, iterations=4, seed=2)[1:]])
+        cp_g = ControlPlane.for_simulation(model, fab_g)
+        cp_g.fail_nic(0, failed_nics=2)
+        gpu = np.mean([r.total for r in simulate_training(
+            model, fab_g, iterations=4, seed=2, controlplane=cp_g)[1:]])
         # Full-node failure: the replacement node connects via EPS only (§5.4).
         fab_f = make_fabric("mixnet", cfg)
-        fab_f.fail_server_ocs(0)
-        node = np.mean([r.total for r in simulate_training(model, fab_f, iterations=4, seed=3)[1:]])
+        cp_f = ControlPlane.for_simulation(model, fab_f)
+        cp_f.fail_device(0)
+        node = np.mean([r.total for r in simulate_training(
+            model, fab_f, iterations=4, seed=3, controlplane=cp_f)[1:]])
         _row(
             f"fig14_failures/{name}", 0.0,
             f"nic=+{(nic/base-1)*100:.1f}% gpu=+{(gpu/base-1)*100:.1f}% "
@@ -345,6 +356,62 @@ def fig28_reconfig_latency(fast=False):
              f"normalized={t/base:.2f} (paper: ~1.0 until ~1s, then degrades)")
 
 
+def copilot_refit(fast=False):
+    """Batched COPILOT refit (one vmapped fit across all layers) vs the
+    per-layer jit-call loop, at the paper-scale 16 transitions.
+
+    Records the wall-clock ratio and the max transition deviation into
+    BENCH_copilot.json (repo root) so the perf trajectory is tracked."""
+    import json
+    import os
+
+    from repro.core.copilot import CopilotPredictor
+    from repro.core.netsim import GateTraceGenerator
+    from repro.core.traffic import TrafficMonitor
+
+    layers, e = 17, 32  # 16 fitted transition matrices
+    trace = GateTraceGenerator(layers, e, seed=0)
+    monitor = TrafficMonitor(layers, e)
+    for _ in range(8):
+        loads = trace.step()
+        for l in range(layers):
+            monitor.record(l, loads[l] * 1000)
+        monitor.advance()
+
+    entries = []
+    for fit_steps in (60, 150):
+        looped = CopilotPredictor(layers, e, fit_steps=fit_steps, batched_refit=False)
+        batched = CopilotPredictor(layers, e, fit_steps=fit_steps)
+        us_loop = _timeit(lambda: looped.update(monitor), reps=5)
+        us_batch = _timeit(lambda: batched.update(monitor), reps=5)
+        err = float(np.max(np.abs(looped.state.transitions - batched.state.transitions)))
+        speedup = us_loop / max(us_batch, 1e-9)
+        _row(
+            f"copilot_refit/steps{fit_steps}", us_batch,
+            f"looped_ms={us_loop/1e3:.1f} batched_ms={us_batch/1e3:.1f} "
+            f"speedup={speedup:.2f}x max_dev={err:.2e} (atol 1e-5 required)",
+        )
+        entries.append({
+            "bench": "copilot_refit",
+            "layers": layers,
+            "experts": e,
+            "fit_steps": fit_steps,
+            "looped_us": round(us_loop, 1),
+            "batched_us": round(us_batch, 1),
+            "speedup": round(speedup, 3),
+            "max_transition_deviation": err,
+        })
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_copilot.json")
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.extend(entries)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
 def kernels(fast=False):
     """Framework table: Pallas kernels validated against oracles (interpret)
     + oracle-path timings on CPU."""
@@ -429,6 +496,7 @@ ALL = {
     "fig26_scalability": fig26_scalability,
     "fig27_optical_degree": fig27_optical_degree,
     "fig28_reconfig_latency": fig28_reconfig_latency,
+    "copilot_refit": copilot_refit,
     "kernels": kernels,
     "beyond_placement": beyond_placement,
     "beyond_a2a_hierarchy": beyond_a2a_hierarchy,

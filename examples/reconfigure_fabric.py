@@ -1,11 +1,13 @@
 """MixNet control-plane walkthrough (paper Fig 7 + Fig 20 at small scale):
 
   1. generate realistic expert-load traces (temporally dynamic, sparse),
-  2. characterize the all-to-all traffic matrices (§5.1),
-  3. fit MIXNET-COPILOT and predict the next layer's demand (§B.1),
+  2. feed them through the unified control-plane engine's lifecycle
+     (observe -> end_step -> plan -> apply, DESIGN.md §3),
+  3. COPILOT predicts the next layer's demand ahead of its gate (§B.1),
   4. run Algorithm 1 to allocate optical circuits (§5.2),
   5. compare completion time vs a demand-oblivious uniform topology,
-  6. show the TPU analogue: expert re-placement relieving the bottleneck.
+  6. show the TPU analogue: per-layer expert re-placement relieving each
+     layer's own bottleneck.
 
     PYTHONPATH=src python examples/reconfigure_fabric.py
 """
@@ -18,31 +20,32 @@ import numpy as np
 
 from repro.configs.paper_models import MIXTRAL_8X7B
 from repro.core import topology as topo
+from repro.core.controlplane import ControlPlane
 from repro.core.copilot import CopilotPredictor, topk_accuracy
 from repro.core.netsim import GateTraceGenerator
-from repro.core.placement import solve_expert_placement
-from repro.core.traffic import TrafficMonitor
 
 
 def main():
     layers, experts, servers = 8, 16, 8
     trace = GateTraceGenerator(layers, experts, seed=1)
-    monitor = TrafficMonitor(layers, experts)
-    copilot = CopilotPredictor(layers, experts, fit_steps=100)
+    engine = ControlPlane(layers, experts, num_devices=servers, fit_steps=100)
 
-    print("== 1-3: monitor traffic, fit COPILOT ==")
-    for it in range(12):
+    print("== 1-3: observe traffic, fit COPILOT (engine lifecycle) ==")
+    for _ in range(12):
         loads = trace.step()
         for l in range(layers):
-            monitor.record(l, loads[l] * 1000)
-        copilot.update(monitor)
-        monitor.advance()
+            engine.observe(l, loads[l] * 1000)
+        engine.end_step()
     loads = trace.step()
-    pred = copilot.predict(0, loads[0])
+    for l in range(layers):
+        engine.observe(l, loads[l] * 1000)
+    pred = engine.predict_load(1)  # layer 1's load, forecast from layer 0
     acc = topk_accuracy(pred, loads[1], k=4)
+    unchanged = topk_accuracy(
+        CopilotPredictor.baseline_unchanged(loads[0]), loads[1], 4
+    )
     print(f"COPILOT top-4 accuracy on the next layer: {acc:.2f} "
-          f"(unchanged baseline: "
-          f"{topk_accuracy(copilot.baseline_unchanged(loads[0]), loads[1], 4):.2f})")
+          f"(unchanged baseline: {unchanged:.2f})")
 
     print("\n== 4-5: Algorithm 1 circuit allocation ==")
     demand = trace.device_demand(loads[1], MIXTRAL_8X7B, servers)
@@ -57,14 +60,21 @@ def main():
           f"uniform={t_uniform*1e3:.2f} ms  "
           f"speedup={t_uniform/max(t_solved,1e-12):.2f}x")
 
-    print("\n== 6: TPU analogue — expert re-placement ==")
+    print("\n== 6: TPU analogue — per-layer expert re-placement ==")
     rng = np.random.default_rng(0)
-    token_demand = rng.random((servers, experts)) * (rng.random((servers, experts)) < 0.3)
-    token_demand[0, 9] = 50.0  # hot (device 0 -> expert 9) pair
-    plan = solve_expert_placement(token_demand, experts // servers)
-    print(f"bytes-on-wire before={plan.cost_before:.1f} after={plan.cost_after:.1f} "
-          f"(gain {100*plan.gain/max(plan.cost_before,1e-9):.0f}%)")
-    print(f"expert->slot permutation: {plan.perm.tolist()}")
+    placer = ControlPlane(2, experts, num_devices=servers, use_copilot=False)
+    for layer, hot in ((0, 9), (1, 3)):
+        token_demand = rng.random((servers, experts)) * (
+            rng.random((servers, experts)) < 0.3
+        )
+        token_demand[0, hot] = 50.0  # layer-specific hot (device 0 -> expert) pair
+        plan = placer.plan(layer, token_demand)
+        placer.apply(plan)
+        print(f"layer {layer}: gain={plan.gain_bytes:.1f} bytes "
+              f"({plan.reason}); expert->slot perm: "
+              f"{placer.perm_stack()[layer].tolist()}")
+    print("per-layer perms differ:",
+          bool((placer.perm_stack()[0] != placer.perm_stack()[1]).any()))
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@
 Control plane: :mod:`repro.core.traffic` (demand characterization),
 :mod:`repro.core.copilot` (COPILOT prediction), :mod:`repro.core.topology`
 (Algorithm 1), :mod:`repro.core.placement` (TPU-native expert re-placement),
-:mod:`repro.core.reconfig` (runtime controller + failure handling).
+:mod:`repro.core.controlplane` (the unified observe/plan/apply engine +
+failure handling, shared by the trainer and the simulator).
 
 Data plane: :mod:`repro.core.collectives` (hierarchical a2a / all-reduce).
 
@@ -13,6 +14,7 @@ Evaluation plane: :mod:`repro.core.fabric`, :mod:`repro.core.netsim`,
 
 from repro.core import (
     collectives,
+    controlplane,
     copilot,
     cost,
     fabric,
@@ -24,6 +26,6 @@ from repro.core import (
 )
 
 __all__ = [
-    "collectives", "copilot", "cost", "fabric", "netsim",
+    "collectives", "controlplane", "copilot", "cost", "fabric", "netsim",
     "placement", "reconfig", "topology", "traffic",
 ]

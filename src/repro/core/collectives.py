@@ -33,6 +33,14 @@ __all__ = [
 ]
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static mesh-axis size; ``lax.psum(1, axis)`` constant-folds on jax
+    releases predating ``lax.axis_size``."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
 def _grid_groups(p: int, group_size: int) -> tuple[list[list[int]], list[list[int]]]:
     if p % group_size != 0:
         raise ValueError(f"axis size {p} not divisible by group size {group_size}")
@@ -62,7 +70,7 @@ def hierarchical_all_to_all(
       ``[P, ...]`` chunks ordered by source device — identical to
       :func:`flat_all_to_all`.
     """
-    p = lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     h = group_size
     if p == 1 or h == 1 or h >= p:
         return flat_all_to_all(x, axis_name)
@@ -115,7 +123,7 @@ def hierarchical_psum(
     all-gather over ``inner_axis`` (broadcast back).  Cross-region bytes drop
     by a factor of the inner axis size versus a flat all-reduce.
     """
-    inner = lax.axis_size(inner_axis)
+    inner = _axis_size(inner_axis)
     if inner == 1 or x.shape[scatter_dim] % inner != 0:
         y = lax.psum(x, inner_axis)
         return lax.psum(y, outer_axis) if outer_axis else y
@@ -128,7 +136,7 @@ def hierarchical_psum(
 def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     """Explicit ring all-gather via collective_permute (comm/compute overlap
     building block for the perf path; semantically = lax.all_gather(tiled))."""
-    p = lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     if p == 1:
         return x
     idx = lax.axis_index(axis_name)

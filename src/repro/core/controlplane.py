@@ -1,0 +1,404 @@
+"""Unified runtime-reconfiguration control plane (paper Fig 20, DESIGN.md §3).
+
+One engine drives the paper's monitor -> COPILOT -> solve -> reconfigure loop
+for BOTH consumers of runtime reconfiguration in this repo:
+
+  * the flow-level simulator (:mod:`repro.core.netsim`), where a decision is
+    a per-layer OCS cross-map actuated through ``fabric.prepare`` with the
+    hide-or-block semantics of §5.1, and
+  * the trainer (:mod:`repro.train.trainer`), where a decision is a
+    per-layer expert->slot permutation applied to the stacked expert weights
+    and threaded to the router (the TPU-native analogue of pushing a new
+    cross-map, DESIGN.md §2).
+
+The lifecycle is explicit and identical in both modes:
+
+    engine.observe(layer, load)   # every step, every MoE layer (monitor)
+    engine.end_step()             # advance the window + batched COPILOT refit
+    plan = engine.plan(layer)     # per-layer decision (solve + hysteresis)
+    engine.apply(plan)            # actuate: OCS cross-map or weight permute
+
+Failure handling (§5.4) is folded into the same engine: ``fail_device`` /
+``fail_nic`` notifications flow through the identical decide/apply path —
+in OCS mode the bound fabric masks the failed server's circuits, in
+placement mode the engine emits failover plans (bounded remap permutations)
+and subsequent routine plans keep only the coldest experts parked on failed
+devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.copilot import CopilotPredictor
+from repro.core.placement import (
+    inverse_permutation,
+    placement_cost,
+    solve_expert_placement,
+)
+from repro.core.traffic import TrafficMonitor
+
+__all__ = ["LayerPlan", "ControlPlane", "FailureHandler"]
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    """One layer's reconfiguration decision.
+
+    Exactly one of ``perm`` (placement mode: expert->slot permutation over
+    the *current slot occupancy*) and ``demand`` (OCS mode: the demand
+    matrix to actuate through ``fabric.prepare``) is set when
+    ``reconfigure`` is True.
+    """
+
+    layer: int
+    reconfigure: bool
+    perm: np.ndarray | None = None
+    demand: np.ndarray | None = None
+    predicted: bool = False  # demand came from COPILOT, not observation
+    gain_bytes: float = 0.0
+    reason: str = ""
+
+
+class FailureHandler:
+    """§5.4 failure handling at the placement level.
+
+    Devices are slots on the ``model`` axis.  A failed device's experts are
+    re-homed onto backup slots spread over survivors, producing an expert
+    permutation the runtime applies exactly like a routine reconfiguration.
+    """
+
+    def __init__(self, num_experts: int, num_devices: int):
+        if num_experts % num_devices != 0:
+            raise ValueError("experts must divide devices for slot bookkeeping")
+        self.num_experts = num_experts
+        self.num_devices = num_devices
+        self.experts_per_device = num_experts // num_devices
+        self.failed: set[int] = set()
+
+    def fail_device(self, device: int) -> None:
+        if device < 0 or device >= self.num_devices:
+            raise ValueError("bad device id")
+        self.failed.add(device)
+        if len(self.failed) >= self.num_devices:
+            raise RuntimeError("all devices failed — unrecoverable")
+
+    def restore_device(self, device: int) -> None:
+        self.failed.discard(device)
+
+    def healthy_devices(self) -> list[int]:
+        return [d for d in range(self.num_devices) if d not in self.failed]
+
+    def remap(self) -> np.ndarray:
+        """Expert -> slot map avoiding failed devices (elastic capacity).
+
+        Experts originally on failed devices round-robin onto healthy ones;
+        healthy experts keep their slots where possible (minimal movement,
+        'minor topology adjustments' per §5.4).  Overflow slots live past the
+        nominal range; ``device_of_slot`` translates slot -> device.
+        """
+        epd = self.experts_per_device
+        healthy = self.healthy_devices()
+        if not healthy:
+            raise RuntimeError("no healthy devices")
+        slots = np.full(self.num_experts, -1, dtype=np.int64)
+        for e in range(self.num_experts):
+            dev = e // epd
+            if dev not in self.failed:
+                slots[e] = e
+        overflow = {d: 0 for d in healthy}
+        cursor = 0
+        for e in range(self.num_experts):
+            if slots[e] >= 0:
+                continue
+            dev = healthy[cursor % len(healthy)]
+            cursor += 1
+            slots[e] = self.num_experts + dev * epd + overflow[dev]
+            overflow[dev] += 1
+        return slots
+
+    def swap_remap(self) -> np.ndarray:
+        """Bounded failover *permutation* over ``[0, E)``.
+
+        Every expert homed on a failed device swaps slots with a round-robin
+        chosen backup expert on a healthy device.  Unlike :meth:`remap` this
+        stays within the nominal slot range, so stacked ``[L, E, ...]``
+        weight tensors keep their shape — the TPU analogue of pre-provisioned
+        backup slots.  The displaced (cold) backup experts are the ones
+        parked on the failed device.
+        """
+        epd = self.experts_per_device
+        healthy = self.healthy_devices()
+        if not healthy:
+            raise RuntimeError("no healthy devices")
+        perm = np.arange(self.num_experts)
+        cursor = 0
+        for e in range(self.num_experts):
+            if e // epd not in self.failed:
+                continue
+            dev = healthy[cursor % len(healthy)]
+            backup = dev * epd + (cursor // len(healthy)) % epd
+            perm[e], perm[backup] = perm[backup], perm[e]
+            cursor += 1
+        return perm
+
+    def device_of_slot(self, slot: int) -> int:
+        if slot < self.num_experts:
+            return slot // self.experts_per_device
+        return (slot - self.num_experts) // self.experts_per_device
+
+
+class ControlPlane:
+    """The shared reconfiguration engine (one per reconfigurable region).
+
+    OCS mode (``fabric`` bound): plans carry demand matrices and ``apply``
+    actuates them through ``fabric.prepare`` with hide-or-block accounting.
+    Placement mode (no fabric): plans carry expert permutations over the
+    current slot occupancy and ``apply`` composes them into the per-layer
+    ``perm_stack`` the model's router consumes.
+    """
+
+    def __init__(
+        self,
+        num_layers: int,
+        num_experts: int,
+        *,
+        num_devices: int = 1,
+        replication: int = 1,
+        fabric=None,
+        window: int = 8,
+        min_gain_fraction: float = 0.05,
+        reconfig_cost_bytes: float = 0.0,
+        use_copilot: bool = True,
+        fit_steps: int = 150,
+        batched_refit: bool = True,
+    ):
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.num_devices = max(num_devices, 1)
+        self.replication = max(replication, 1)
+        self.num_virtual = num_experts * self.replication
+        self.experts_per_device = max(self.num_virtual // self.num_devices, 1)
+        self.fabric = fabric
+        self.min_gain_fraction = min_gain_fraction
+        self.reconfig_cost_bytes = reconfig_cost_bytes
+        self.monitor = TrafficMonitor(num_layers, num_experts, window=window)
+        self.copilot = (
+            CopilotPredictor(
+                num_layers, num_experts, fit_steps=fit_steps, batched_refit=batched_refit
+            )
+            if use_copilot and num_layers > 1
+            else None
+        )
+        self.failures = (
+            FailureHandler(self.num_virtual, self.num_devices)
+            if self.num_devices > 1 and self.num_virtual % self.num_devices == 0
+            else None
+        )
+        self.layer_perms = np.tile(
+            np.arange(self.num_virtual, dtype=np.int64), (num_layers, 1)
+        )
+        self.reconfig_count = 0
+
+    @classmethod
+    def for_simulation(
+        cls,
+        model,
+        fabric,
+        *,
+        num_servers_region: int | None = None,
+        gpus_per_server: int = 8,
+        use_copilot: bool = True,
+        fit_steps: int = 60,
+    ) -> "ControlPlane":
+        """Engine for one simulated PP stage's EP region (netsim consumer)."""
+        region = num_servers_region or max(model.gpus_per_stage // gpus_per_server, 2)
+        return cls(
+            num_layers=model.layers_per_stage,
+            num_experts=model.num_experts,
+            num_devices=region,
+            fabric=fabric,
+            use_copilot=use_copilot,
+            fit_steps=fit_steps,
+        )
+
+    # -- lifecycle: observe ---------------------------------------------------
+    def observe(self, layer: int, expert_load, device_matrix=None) -> None:
+        """Record one layer's realized expert load for this step."""
+        self.monitor.record(layer, expert_load, device_matrix)
+
+    def end_step(self) -> None:
+        """Close the step: advance the monitor window, refit COPILOT (one
+        batched vmapped call across all layers)."""
+        self.monitor.advance()
+        if self.copilot is not None:
+            self.copilot.update(self.monitor)
+
+    # -- lifecycle: predict ---------------------------------------------------
+    def predict_load(self, layer: int) -> np.ndarray | None:
+        """COPILOT forecast of ``layer``'s load from layer-1's latest
+        observation (§B.1) — what the FP's first all-to-all must be planned
+        from, before the gate of ``layer`` has run.  None when unavailable."""
+        if self.copilot is None or layer < 1:
+            return None
+        prev = self.monitor.loads(layer - 1)
+        if not len(prev):
+            return None
+        src = min(layer - 1, self.copilot.num_layers - 2)
+        return self.copilot.predict(src, prev[-1])
+
+    # -- lifecycle: plan ------------------------------------------------------
+    def plan(
+        self,
+        layer: int,
+        demand: np.ndarray | None = None,
+        *,
+        predicted: bool = False,
+    ) -> LayerPlan:
+        """Per-layer reconfiguration decision.
+
+        OCS mode: ``demand`` is the region's ``[S, S]`` inter-server matrix
+        (observed or COPILOT-predicted) and the plan simply carries it to the
+        fabric — Algorithm 1 runs inside ``fabric.prepare``.
+
+        Placement mode: ``demand`` is ``[D, E_virtual]`` bytes device->slot;
+        when omitted it is proxied from the monitor's latest load for the
+        layer, mapped through the current slot occupancy.  The plan passes
+        the hide-or-block hysteresis only when the predicted byte gain beats
+        the permutation's own cost.
+        """
+        if self.fabric is not None:
+            if demand is None:
+                raise ValueError("OCS mode requires an explicit demand matrix")
+            return LayerPlan(
+                layer, True, demand=np.asarray(demand, dtype=np.float64),
+                predicted=predicted, reason="ocs cross-map",
+            )
+        if demand is None:
+            demand = self._demand_proxy(layer)
+        if demand is None:
+            return LayerPlan(layer, False, reason="no traffic observed")
+        demand = np.asarray(demand, dtype=np.float64)
+        solved = solve_expert_placement(demand, self.experts_per_device)
+        perm, cost_after = solved.perm, solved.cost_after
+        if self.failures is not None and self.failures.failed:
+            perm = self._park_coldest_on_failed(perm, demand.sum(axis=0))
+            cost_after = placement_cost(demand, perm, self.experts_per_device)
+        gain = solved.cost_before - cost_after
+        threshold = self.min_gain_fraction * max(solved.cost_before, 1e-9)
+        if gain <= max(threshold, 0.0) or gain <= self.reconfig_cost_bytes:
+            return LayerPlan(
+                layer, False, gain_bytes=gain, reason="gain below reconfig cost"
+            )
+        return LayerPlan(
+            layer, True, perm=perm, gain_bytes=gain, reason="bottleneck relief"
+        )
+
+    def _demand_proxy(self, layer: int) -> np.ndarray | None:
+        """``[D, E_virtual]`` demand proxy from the layer's latest load:
+        every data shard contributes tokens proportional to the global load,
+        expressed over the *current slot occupancy* so routine plans compose
+        correctly after earlier reconfigurations."""
+        loads = self.monitor.loads(layer)
+        if not len(loads):
+            return None
+        vload = np.repeat(loads[-1], self.replication) / self.replication
+        occupant = inverse_permutation(self.layer_perms[layer])
+        slot_load = vload[occupant]
+        return np.tile(slot_load[None, :], (self.num_devices, 1))
+
+    def _park_coldest_on_failed(
+        self, perm: np.ndarray, slot_load: np.ndarray
+    ) -> np.ndarray:
+        """Adjust a solved permutation so failed devices host only the
+        coldest experts (their traffic is the §5.4 degradation we accept)."""
+        epd = self.experts_per_device
+        failed_slots = {
+            s for s in range(self.num_virtual) if s // epd in self.failures.failed
+        }
+        if not failed_slots:
+            return perm
+        perm = perm.copy()
+        k = len(failed_slots)
+        cold = set(np.argsort(slot_load, kind="stable")[:k].tolist())
+        hot_on_failed = [
+            c for c in range(self.num_virtual)
+            if perm[c] in failed_slots and c not in cold
+        ]
+        cold_elsewhere = [c for c in sorted(cold) if perm[c] not in failed_slots]
+        for a, b in zip(hot_on_failed, cold_elsewhere):
+            perm[a], perm[b] = perm[b], perm[a]
+        return perm
+
+    # -- lifecycle: apply -----------------------------------------------------
+    def apply(self, plan: LayerPlan, *, hide_window: float = math.inf) -> float:
+        """Actuate a plan; returns the *blocking* seconds (0 when hidden).
+
+        OCS mode mirrors §5.1's hide-or-block: only the part of the
+        reconfiguration delay that does not fit in ``hide_window`` (the
+        pipelined compute between the phase's all-to-alls) stalls the pipe.
+        Placement mode composes the layer's permutation into ``perm_stack``;
+        the caller is responsible for gathering the expert weights with the
+        matching inverse permutation (see ``repro.train.trainer``).
+        """
+        if not plan.reconfigure:
+            return 0.0
+        if self.fabric is not None:
+            overflow = max(0.0, self.fabric.cfg.reconfig_delay_s - hide_window)
+            blocked = self.fabric.prepare(plan.demand, can_hide=overflow <= 0.0)
+            self.reconfig_count += 1
+            return min(blocked, overflow)
+        base = self.layer_perms[plan.layer]
+        self.layer_perms[plan.layer] = plan.perm[base]
+        self.reconfig_count += 1
+        return 0.0
+
+    def perm_stack(self) -> np.ndarray:
+        """``[L, E_virtual]`` per-layer expert->slot maps for the router."""
+        return self.layer_perms.astype(np.int32).copy()
+
+    # -- failures (§5.4) ------------------------------------------------------
+    def fail_device(self, device: int) -> list[LayerPlan]:
+        """A server/device drops out of the region.
+
+        OCS mode: the bound fabric loses the server's optical circuits (EPS
+        fallback, ``MixNetFabric.fail_server_ocs``) and subsequent plans
+        route around it — no placement plans needed.  Placement mode:
+        returns per-layer failover plans (bounded remap permutations) for the
+        consumer to apply through the standard decide/apply path.
+        """
+        if self.failures is not None:
+            self.failures.fail_device(device)
+        if self.fabric is not None:
+            self.fabric.fail_server_ocs(device)
+            return []
+        if self.failures is None:
+            raise ValueError("placement-mode failures need >= 2 devices")
+        perm = self.failures.swap_remap()
+        return [
+            LayerPlan(l, True, perm=perm.copy(), reason="failover remap")
+            for l in range(self.num_layers)
+        ]
+
+    def fail_nic(self, server: int, failed_nics: int = 1) -> None:
+        """Partial NIC failure: the server keeps running with fewer optical
+        links (OCS mode only — the fabric reroutes over the rest + EPS)."""
+        if self.fabric is None:
+            raise ValueError("NIC failures only exist in OCS (fabric) mode")
+        self.fabric.fail_server_nic(server, failed_nics)
+
+    def restore_device(self, device: int) -> None:
+        if self.failures is not None:
+            self.failures.restore_device(device)
+        if self.fabric is not None:
+            self.fabric.restore_server_ocs(device)
+
+    def failover_slots(self) -> np.ndarray:
+        """§5.4 elastic remap (overflow slots allowed) — exposed for
+        consumers that relocate state rather than permute it."""
+        if self.failures is None:
+            raise ValueError("no failure bookkeeping for this region")
+        return self.failures.remap()

@@ -12,6 +12,12 @@ The gate-trace generator reproduces the §3 measurement characteristics:
 temporally varying, spatially sparse expert loads with cross-layer
 conditional structure (which is what MIXNET-COPILOT exploits) and a
 load-balancing-loss-driven slow convergence toward uniformity.
+
+Reconfiguration is driven exclusively through the shared
+:class:`repro.core.controlplane.ControlPlane` engine (the same engine the
+trainer uses): the simulator observes loads into its monitor, asks it for
+per-layer plans (COPILOT-predicted for the FP's first all-to-all), and
+applies them against the fabric with hide-or-block accounting.
 """
 
 from __future__ import annotations
@@ -20,9 +26,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.copilot import CopilotPredictor
+from repro.core.controlplane import ControlPlane
 from repro.core.fabric import Fabric
-from repro.core.traffic import TrafficMonitor
 
 __all__ = [
     "SimModel",
@@ -234,19 +239,20 @@ def _stage_times(
     loads: np.ndarray,
     trace: GateTraceGenerator,
     num_servers_region: int,
-    predictor: CopilotPredictor | None,
-    monitor: TrafficMonitor | None,
+    cp: ControlPlane,
 ) -> tuple[float, float, float]:
     """One PP stage's communication over a FULL iteration (all microbatches).
 
-    Reconfiguration semantics follow Fig 20: the topology is reconfigured
+    Reconfiguration semantics follow Fig 20, driven entirely through the
+    shared control-plane engine (DESIGN.md §3): the topology is reconfigured
     *twice per MoE layer per iteration* (once covering the FP pair of
-    all-to-alls, once the BP pair), amortized across microbatches.  A
-    reconfiguration blocks only if its delay exceeds the pipelined compute
-    window between consecutive all-to-alls of that layer — with 25 ms OCS and
-    production-size compute this is fully hidden (Fig 28's flat region), and
-    degradation appears once the delay approaches the per-layer compute
-    budget, reproducing Fig 28's cliff.
+    all-to-alls, once the BP pair), amortized across microbatches — each
+    layer gets its own OCS cross-map via ``cp.plan``/``cp.apply`` ->
+    ``fabric.prepare``.  A reconfiguration blocks only if its delay exceeds
+    the pipelined compute window between consecutive all-to-alls of that
+    layer — with 25 ms OCS and production-size compute this is fully hidden
+    (Fig 28's flat region), and degradation appears once the delay
+    approaches the per-layer compute budget, reproducing Fig 28's cliff.
     """
     attn_f = model.attention_time_per_layer()
     exp_f = model.expert_time_per_layer()
@@ -256,7 +262,6 @@ def _stage_times(
     hide_window = m * (attn_f + exp_f)
     a2a_total = 0.0
     blocked = 0.0
-    prev_load = None
     for li in range(model.layers_per_stage):
         load = loads[li % loads.shape[0]]
         demand = trace.device_demand(load, model, num_servers_region)
@@ -266,28 +271,23 @@ def _stage_times(
         # previous layer's topology (never blocks, but circuits mismatch).
         if fabric.cfg.reconfig_delay_s <= 1e-3:
             # Microsecond-scale OCS: exact reconfig fits before a2a#1 (Fig 28).
-            blocked += max(0.0, fabric.prepare(demand, can_hide=True))
-        elif predictor is not None and prev_load is not None and loads.shape[0] > 1:
-            pred = predictor.predict(min(li - 1, predictor.num_layers - 2), prev_load)
-            pred_demand = trace.device_demand(pred, model, num_servers_region)
-            blocked += fabric.prepare(pred_demand, can_hide=True)
-        # else: reuse previous topology — no prepare call at all.
+            blocked += cp.apply(cp.plan(li, demand))
+        else:
+            pred = cp.predict_load(li)
+            if pred is not None:
+                pred_demand = trace.device_demand(pred, model, num_servers_region)
+                blocked += cp.apply(cp.plan(li, pred_demand, predicted=True))
+            # else: reuse previous topology — no plan at all.
         a2a_total += m * fabric.alltoall_time(demand)
         # --- FP a2a #2 (combine, transposed matrix): reconfig hidden when the
         # compute window allows; otherwise the overflow blocks the pipe.
-        overflow = max(0.0, fabric.cfg.reconfig_delay_s - hide_window)
-        b = fabric.prepare(demand.T, can_hide=overflow <= 0.0)
-        blocked += min(b, overflow)  # only the un-hidden part blocks
+        blocked += cp.apply(cp.plan(li, demand.T), hide_window=hide_window)
         a2a_total += m * fabric.alltoall_time(demand.T)
         # --- BP reconfig + a2a pair (same matrices, §5.1; window = bwd compute).
-        overflow_b = max(0.0, fabric.cfg.reconfig_delay_s - 2.0 * hide_window)
-        b = fabric.prepare(demand, can_hide=overflow_b <= 0.0)
-        blocked += min(b, overflow_b)
+        blocked += cp.apply(cp.plan(li, demand), hide_window=2.0 * hide_window)
         a2a_total += m * fabric.alltoall_time(demand)
         a2a_total += m * fabric.alltoall_time(demand.T)
-        if monitor is not None:
-            monitor.record(li, load * model.tokens_per_microbatch * model.top_k)
-        prev_load = load
+        cp.observe(li, load * model.tokens_per_microbatch * model.top_k)
     fwd_compute = (attn_f + exp_f) * model.layers_per_stage
     bwd_compute = 2.0 * fwd_compute
     return m * (fwd_compute + bwd_compute), a2a_total, blocked
@@ -299,17 +299,24 @@ def simulate_iteration(
     trace: GateTraceGenerator,
     *,
     num_servers_region: int | None = None,
-    predictor: CopilotPredictor | None = None,
-    monitor: TrafficMonitor | None = None,
+    controlplane: ControlPlane | None = None,
     gpus_per_server: int = 8,
 ) -> IterationResult:
-    """Cost one training iteration of ``model`` on ``fabric``."""
+    """Cost one training iteration of ``model`` on ``fabric``.
+
+    ``controlplane`` is the engine driving reconfiguration for this region;
+    a fresh one (no COPILOT history) is built when not supplied.
+    """
     if num_servers_region is None:
         num_servers_region = max(model.gpus_per_stage // gpus_per_server, 2)
+    if controlplane is None:
+        controlplane = ControlPlane.for_simulation(
+            model, fabric, num_servers_region=num_servers_region, use_copilot=False
+        )
     loads = trace.step()
 
-    compute, a2a, blocked, = _stage_times(
-        model, fabric, loads, trace, num_servers_region, predictor, monitor
+    compute, a2a, blocked = _stage_times(
+        model, fabric, loads, trace, num_servers_region, controlplane
     )
     # 1F1B: the critical path stretches the per-stage work by (M+P-1)/M.
     m, p = model.num_microbatches, model.pp_degree
@@ -339,29 +346,28 @@ def simulate_training(
     seed: int = 0,
     use_copilot: bool = True,
     gpus_per_server: int = 8,
+    controlplane: ControlPlane | None = None,
 ) -> list[IterationResult]:
-    """Run several iterations, fitting COPILOT online like the real system."""
+    """Run several iterations through one persistent control-plane engine,
+    fitting COPILOT online like the real system (Fig 20's outer loop).
+
+    Pass ``controlplane`` to inject failures or custom engine settings — e.g.
+    ``cp.fail_device(0)`` before calling to reproduce §5.4 scenarios."""
     region = max(model.gpus_per_stage // gpus_per_server, 2)
     trace = GateTraceGenerator(model.layers_per_stage, model.num_experts, seed=seed)
-    monitor = TrafficMonitor(model.layers_per_stage, model.num_experts)
-    predictor = (
-        CopilotPredictor(model.layers_per_stage, model.num_experts, fit_steps=60)
-        if use_copilot and model.layers_per_stage > 1
-        else None
+    cp = controlplane or ControlPlane.for_simulation(
+        model, fabric, num_servers_region=region, use_copilot=use_copilot
     )
     results = []
-    for it in range(iterations):
+    for _ in range(iterations):
         res = simulate_iteration(
             model,
             fabric,
             trace,
             num_servers_region=region,
-            predictor=predictor,
-            monitor=monitor,
+            controlplane=cp,
             gpus_per_server=gpus_per_server,
         )
         results.append(res)
-        if predictor is not None and it >= 1:
-            predictor.update(monitor)
-        monitor.advance()
+        cp.end_step()
     return results

@@ -1,157 +1,17 @@
-"""Runtime reconfiguration engine + failure handling (paper §5.2, §5.4).
+"""Back-compat shim — the runtime reconfiguration engine moved.
 
-`ReconfigController` is the decentralized per-region topology controller: it
-consumes the traffic monitor, fits COPILOT, runs the placement solver (the
-TPU analogue of pushing a new OCS cross-map) and tells the trainer when a new
-expert placement is worth the blocking cost — the same hide-or-block decision
-the paper makes for the 25 ms OCS delay.
+The old ``ReconfigController`` (trainer-only, one global permutation tiled
+across layers) and the standalone ``FailureHandler`` were unified into
+:mod:`repro.core.controlplane`: one engine with the explicit
+``observe -> end_step -> plan -> apply`` lifecycle drives per-layer
+decisions for both the trainer (expert placement) and the simulator (OCS
+cross-maps), with failure handling folded into the same decide/apply path.
 
-`FailureHandler` implements §5.4 at the framework level: failed devices are
-excluded from the placement candidate set, their experts re-homed to backup
-slots, and the topology regenerated regionally (no global controller).
+Import from :mod:`repro.core.controlplane` in new code.
 """
 
 from __future__ import annotations
 
-import dataclasses
+from repro.core.controlplane import ControlPlane, FailureHandler, LayerPlan
 
-import numpy as np
-
-from repro.core.copilot import CopilotPredictor
-from repro.core.placement import PlacementPlan, solve_expert_placement
-from repro.core.traffic import TrafficMonitor
-
-__all__ = ["ReconfigDecision", "ReconfigController", "FailureHandler"]
-
-
-@dataclasses.dataclass
-class ReconfigDecision:
-    reconfigure: bool
-    plan: PlacementPlan | None
-    predicted_gain_bytes: float
-    reason: str
-
-
-class ReconfigController:
-    """One controller per reconfigurable region (per EP group)."""
-
-    def __init__(
-        self,
-        num_layers: int,
-        num_experts: int,
-        experts_per_device: int,
-        *,
-        window: int = 8,
-        reconfig_cost_bytes: float = 0.0,
-        min_gain_fraction: float = 0.05,
-        use_copilot: bool = True,
-    ):
-        self.monitor = TrafficMonitor(num_layers, num_experts, window=window)
-        self.copilot = (
-            CopilotPredictor(num_layers, num_experts) if use_copilot and num_layers > 1 else None
-        )
-        self.experts_per_device = experts_per_device
-        self.reconfig_cost_bytes = reconfig_cost_bytes
-        self.min_gain_fraction = min_gain_fraction
-        self.current_perm = np.arange(num_experts)
-        self.reconfig_count = 0
-
-    # -- data collection (called from the training loop every step) ---------
-    def observe(self, layer: int, expert_load, device_matrix=None) -> None:
-        self.monitor.record(layer, expert_load, device_matrix)
-
-    def end_step(self) -> None:
-        self.monitor.advance()
-        if self.copilot is not None:
-            self.copilot.update(self.monitor)
-
-    # -- placement decision ---------------------------------------------------
-    def decide(self, token_demand: np.ndarray) -> ReconfigDecision:
-        """Given ``[D, E]`` demand (bytes device->expert), decide re-placement.
-
-        Mirrors §5.1's hide-or-block reasoning: only reconfigure when the
-        predicted byte savings beat the permutation's own traffic cost plus a
-        hysteresis margin.
-        """
-        plan = solve_expert_placement(token_demand, self.experts_per_device)
-        gain = plan.gain
-        threshold = self.min_gain_fraction * max(plan.cost_before, 1e-9)
-        if gain <= max(threshold, 0.0) or gain <= self.reconfig_cost_bytes:
-            return ReconfigDecision(False, None, gain, "gain below reconfig cost")
-        self.current_perm = plan.perm.copy()
-        self.reconfig_count += 1
-        return ReconfigDecision(True, plan, gain, "bottleneck relief")
-
-    def predicted_demand(self, layer: int, observed_load: np.ndarray) -> np.ndarray | None:
-        """COPILOT forecast for the next layer's load (§B.1), or None."""
-        if self.copilot is None or layer >= self.copilot.num_layers - 1:
-            return None
-        return self.copilot.predict(layer, observed_load)
-
-
-class FailureHandler:
-    """§5.4 failure handling at the placement level.
-
-    Devices are slots on the ``model`` axis.  A failed device's experts are
-    re-homed onto the designated backup device (single-GPU failure) or spread
-    over survivors (full-node failure), producing a new expert permutation
-    that the runtime applies exactly like a routine reconfiguration.
-    """
-
-    def __init__(self, num_experts: int, num_devices: int):
-        if num_experts % num_devices != 0:
-            raise ValueError("experts must divide devices for slot bookkeeping")
-        self.num_experts = num_experts
-        self.num_devices = num_devices
-        self.experts_per_device = num_experts // num_devices
-        self.failed: set[int] = set()
-
-    def fail_device(self, device: int) -> None:
-        if device < 0 or device >= self.num_devices:
-            raise ValueError("bad device id")
-        self.failed.add(device)
-        if len(self.failed) >= self.num_devices:
-            raise RuntimeError("all devices failed — unrecoverable")
-
-    def restore_device(self, device: int) -> None:
-        self.failed.discard(device)
-
-    def healthy_devices(self) -> list[int]:
-        return [d for d in range(self.num_devices) if d not in self.failed]
-
-    def remap(self) -> np.ndarray:
-        """Expert -> slot permutation avoiding failed devices.
-
-        Experts originally on failed devices round-robin onto healthy ones;
-        healthy experts keep their slots where possible (minimal movement,
-        'minor topology adjustments' per §5.4).
-        """
-        epd = self.experts_per_device
-        healthy = self.healthy_devices()
-        if not healthy:
-            raise RuntimeError("no healthy devices")
-        slots = np.full(self.num_experts, -1, dtype=np.int64)
-        # Keep healthy experts in place.
-        for e in range(self.num_experts):
-            dev = e // epd
-            if dev not in self.failed:
-                slots[e] = e
-        # Re-home the rest onto healthy devices' overflow slots (experts
-        # per healthy device grows — capacity is elastic in the MoE layer).
-        overflow = {d: 0 for d in healthy}
-        cursor = 0
-        for e in range(self.num_experts):
-            if slots[e] >= 0:
-                continue
-            dev = healthy[cursor % len(healthy)]
-            cursor += 1
-            # Overflow slots live past the nominal range; the MoE layer's
-            # capacity map translates slot -> (device, local_index).
-            slots[e] = self.num_experts + dev * epd + overflow[dev]
-            overflow[dev] += 1
-        return slots
-
-    def device_of_slot(self, slot: int) -> int:
-        if slot < self.num_experts:
-            return slot // self.experts_per_device
-        return (slot - self.num_experts) // self.experts_per_device
+__all__ = ["ControlPlane", "FailureHandler", "LayerPlan"]

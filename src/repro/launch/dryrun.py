@@ -32,7 +32,7 @@ import numpy as np
 from repro.configs import ARCH_NAMES, get_config
 from repro.configs.shapes import SHAPES, cell_supported
 from repro.launch.hlo_analysis import analyze_hlo
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.launch.roofline import HW, analytic_hbm_bytes, roofline_from_counts
 from repro.launch.specs import make_cell
 
@@ -71,7 +71,7 @@ def run_cell(
     t0 = time.time()
     fn, args = make_cell(cfg, shape, mesh, microbatches=microbatches)
     donate = getattr(fn, "donate_argnums", ())
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -79,6 +79,8 @@ def run_cell(
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+        cost = cost[0] if cost else {}
     if verbose:
         print(f"--- {arch} / {shape_name} / mesh {mesh_name} ---")
         print("memory_analysis:", mem)

@@ -60,10 +60,9 @@ def main():
             if n % m == 0:
                 model = m
                 break
-        mesh = jax.make_mesh(
-            (n // model, model), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((n // model, model), ("data", "model"))
     plan = make_plan(mesh)
 
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),

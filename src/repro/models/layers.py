@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
+from repro.parallel.sharding import shard_map
 
 Params = dict
 Specs = dict
@@ -472,7 +473,7 @@ def mlp_apply_sp(params: Params, x: jax.Array, cfg, plan, mesh) -> jax.Array:
         return jax.lax.psum_scatter(y_part, "model", scatter_dimension=1, tiled=True)
 
     w_gate = params.get("w_gate", params["w_in"])
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(
@@ -509,7 +510,7 @@ def oproj_sp(out: jax.Array, wo: jax.Array, plan, mesh) -> jax.Array:
         y_part = jnp.einsum("bshk,hkd->bsd", o, w)
         return jax.lax.psum_scatter(y_part, "model", scatter_dimension=1, tiled=True)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(

@@ -12,11 +12,14 @@
   grouped Pallas GEMM, and returned the same way.  EP traffic never leaves
   the ``model`` axis — the regional locality the measurement study (§3)
   found.  Runtime expert re-placement (the OCS-reconfiguration analogue) is
-  realized by permuting expert->slot assignments: the trainer permutes the
-  stacked expert weights (:func:`repro.core.placement.apply_placement`) and
-  passes the same ``expert_perm`` here so the router addresses the new
-  slots — the wire protocol itself never changes, exactly like pushing a
-  new cross-map to the OCS.
+  realized by permuting expert->slot assignments *per layer*: the control
+  plane (:mod:`repro.core.controlplane`) plans one permutation per MoE
+  layer, the trainer gathers that layer's stacked expert weights into their
+  new slots (:func:`repro.train.trainer.permute_expert_weights`), and the
+  transformer scan feeds this module the matching row of the ``[repeats,
+  E_virtual]`` ``expert_perm`` stack so the router addresses the new slots —
+  the wire protocol itself never changes, exactly like pushing a per-region
+  cross-map to the OCS.
 
 Virtual experts (DESIGN.md §5): when E < model-axis size P, every expert is
 split into r = P/E tensor shards; a token is dispatched to all r shards of
@@ -36,7 +39,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import mixnet_all_to_all
 from repro.kernels import ops
-from repro.parallel.sharding import ShardingPlan, constrain, virtual_experts
+from repro.parallel.sharding import ShardingPlan, constrain, shard_map, virtual_experts
 
 __all__ = ["init_moe", "moe_apply", "MoEStats", "router_losses"]
 
@@ -291,6 +294,8 @@ def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, ax
 
 
 def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm=None):
+    """``expert_perm`` is THIS layer's ``[E_virtual]`` expert->slot map (one
+    row of the trainer's per-layer perm stack); None means identity."""
     e = cfg.moe
     ev, _ = virtual_experts(e.num_experts, plan.model_size)
     perm_arr = (
@@ -298,6 +303,11 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm=None):
         if expert_perm is not None
         else jnp.arange(ev, dtype=jnp.int32)
     )
+    if perm_arr.shape != (ev,):
+        raise ValueError(
+            f"expert_perm must be this layer's [E_virtual]={ev} row, "
+            f"got shape {perm_arr.shape}"
+        )
 
     def body(router, w_in, w_gate, w_out, xl, perm, axis_names=()):
         return _moe_mixnet_local(
@@ -325,7 +335,7 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm=None):
         )
         seq_ax = plan.model_axis if s_sz % plan.model_size == 0 else None
         tok_spec = P(batch_ax, seq_ax, None)
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda r_, wi, wg, wo, xl, pm: body(
                 r_, wi, wg, wo, xl, pm, axis_names=axis_names
             ),

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 __all__ = ["pipeline_apply", "num_ticks"]
 
 
@@ -88,7 +90,7 @@ def pipeline_apply(
                      is_leaf=lambda x: hasattr(x, "shape")),
         P(),  # microbatches replicated
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage,
         mesh=mesh,
         in_specs=in_specs,

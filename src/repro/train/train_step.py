@@ -29,6 +29,9 @@ __all__ = [
 
 
 def loss_fn(params, batch, cfg, plan, mesh=None, expert_perm=None):
+    """``expert_perm``: ``[repeats, E_virtual]`` per-layer expert->slot maps
+    from the control plane (distinct rows per layer after regional
+    reconfiguration); the transformer scan slices one row per repeat."""
     feats, aux, _ = tfm.model_apply(
         params, batch, cfg, plan, mesh=mesh, mode="train", expert_perm=expert_perm
     )

@@ -1,17 +1,19 @@
 """Training loop wiring the whole system together:
 
-  data -> jit(train_step) -> MoE telemetry -> MixNet control loop
-  (traffic monitor -> COPILOT -> placement solver -> expert-weight permute)
+  data -> jit(train_step) -> MoE telemetry -> MixNet control plane
+  (observe -> end_step -> plan -> apply, repro.core.controlplane)
   -> checkpoint/restart -> straggler watchdog.
 
 The control loop is the paper's runtime reconfiguration (Fig 20) at the
-framework level: every ``reconfig_every`` steps the controller folds the
-observed per-layer expert loads into a device demand matrix, solves the
-greedy placement (Algorithm 1's TPU analogue), and — only when the
-predicted gain clears the permute cost — gathers the stacked expert weights
-into their new slots and updates the router's slot map.  Training math is
-unchanged (the paper: "MixNet does not alter the parallelization
-strategies... and does not affect training accuracy").
+framework level, driven through the shared :class:`ControlPlane` engine:
+every step the trainer feeds the realized per-layer expert loads to the
+engine's monitor; every ``reconfig_every`` steps it asks for a *per-layer*
+placement plan (the regional per-layer OCS cross-maps of §5.2, DESIGN.md
+§3) and — only for layers whose predicted gain clears the permute cost —
+gathers that layer's stacked expert weights into their new slots and
+updates the router's per-layer slot map.  Training math is unchanged (the
+paper: "MixNet does not alter the parallelization strategies... and does
+not affect training accuracy").
 """
 
 from __future__ import annotations
@@ -23,15 +25,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.controlplane import ControlPlane, LayerPlan
 from repro.core.placement import inverse_permutation
-from repro.core.reconfig import ReconfigController
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import ShardingPlan, virtual_experts
 from repro.train import checkpoint as ckpt
 from repro.train.train_step import init_all, make_train_step
 
-__all__ = ["TrainerConfig", "Trainer"]
+__all__ = ["TrainerConfig", "Trainer", "permute_expert_weights"]
+
+
+def permute_expert_weights(params, inv_stack: np.ndarray, num_virtual: int):
+    """Gather every MoE block's stacked expert tensors into their new slots.
+
+    ``inv_stack`` is ``[L, E_virtual]`` of per-layer *inverse* permutations
+    (``inv[s]`` = the slot whose expert moves into slot ``s``); identity rows
+    leave a layer untouched.  Applied to every ``[L, E_virtual, ...]`` leaf
+    under ``params["blocks"][*]["moe"]`` — the weight-side half of a
+    reconfiguration, mirrored by the router-side ``perm_stack`` composition
+    in :class:`repro.core.controlplane.ControlPlane.apply`.
+    """
+    reps = inv_stack.shape[0]
+    rows = jnp.asarray(inv_stack)
+    gather_idx = (jnp.arange(reps)[:, None], rows)
+
+    def permute(leaf):
+        if leaf.ndim >= 2 and leaf.shape[0] == reps and leaf.shape[1] == num_virtual:
+            return leaf[gather_idx]
+        return leaf
+
+    for bparams in params["blocks"].values():
+        if "moe" in bparams:
+            for wname in ("w_in", "w_gate", "w_out"):
+                bparams["moe"][wname] = permute(bparams["moe"][wname])
+    return params
 
 
 @dataclasses.dataclass
@@ -76,20 +104,18 @@ class Trainer:
         self.straggler_events = 0
 
         # MixNet control plane (only meaningful for MoE archs).
-        self.controller = None
+        self.controlplane: ControlPlane | None = None
         self.expert_perm = None
         if cfg.is_moe and tcfg.reconfig_every:
             ev, r = virtual_experts(cfg.moe.num_experts, plan.model_size)
-            self.controller = ReconfigController(
+            self.controlplane = ControlPlane(
                 num_layers=cfg.pattern_repeats,
                 num_experts=cfg.moe.num_experts,
-                experts_per_device=max(ev // max(plan.model_size, 1), 1),
+                num_devices=max(plan.model_size, 1),
+                replication=r,
                 min_gain_fraction=tcfg.reconfig_min_gain,
             )
-            self._virtual = (ev, r)
-            self.expert_perm = np.tile(
-                np.arange(ev, dtype=np.int32), (cfg.pattern_repeats, 1)
-            )
+            self.expert_perm = self.controlplane.perm_stack()
         self.reconfig_count = 0
 
     # -- checkpoint/restart ---------------------------------------------------
@@ -114,41 +140,55 @@ class Trainer:
             ckpt.save(self.tcfg.ckpt_dir, self.step, tree, keep=self.tcfg.ckpt_keep)
 
     # -- MixNet reconfiguration ------------------------------------------------
-    def _maybe_reconfigure(self, expert_load: np.ndarray):
-        """expert_load: [repeats, E] realized loads from the last step."""
-        c = self.controller
+    def _apply_layer_plans(self, plans: list[LayerPlan]) -> bool:
+        """Actuate per-layer placement plans: gather each reconfiguring
+        layer's expert weights into their new slots, then compose the
+        router-side perms through the engine (``perm[base]`` ordering)."""
+        cp = self.controlplane
+        live = [p for p in plans if p.reconfigure]
+        if not live:
+            return False
+        inv_stack = np.tile(
+            np.arange(cp.num_virtual, dtype=np.int64), (cp.num_layers, 1)
+        )
+        for p in live:
+            inv_stack[p.layer] = inverse_permutation(p.perm)
+        self.params = permute_expert_weights(self.params, inv_stack, cp.num_virtual)
+        for p in live:
+            cp.apply(p)
+        self.expert_perm = cp.perm_stack()
+        self.reconfig_count = cp.reconfig_count
+        return True
+
+    def _reconfigure_step(self, expert_load: np.ndarray):
+        """Drive one step of the Fig 20 loop through the shared engine.
+
+        ``expert_load``: [repeats, E] realized loads from the last step.
+        """
+        cp = self.controlplane
         for layer in range(expert_load.shape[0]):
-            c.observe(layer, expert_load[layer])
-        c.end_step()
+            cp.observe(layer, expert_load[layer])
+        cp.end_step()
         if self.step % self.tcfg.reconfig_every:
             return
-        ev, r = self._virtual
-        p = max(self.plan.model_size, 1)
-        epd = max(ev // p, 1)
-        # Fold the mean load into a [devices, E_virtual] demand proxy: every
-        # data shard contributes tokens proportional to the global load.
-        load = expert_load.mean(axis=0)
-        vload = np.repeat(load, r) / max(r, 1)
-        demand = np.tile(vload[None, :], (p, 1))
-        decision = c.decide(demand)
-        if not decision.reconfigure:
-            return
-        perm = decision.plan.perm.astype(np.int32)  # virtual slot permutation
-        inv = inverse_permutation(perm)
-        # Permute stacked expert weights of every MoE block: slot s must hold
-        # the expert whose new slot is s.
-        def permute(leaf):
-            return leaf[:, inv] if leaf.ndim >= 2 and leaf.shape[1] == ev else leaf
+        self._apply_layer_plans([cp.plan(layer) for layer in range(cp.num_layers)])
 
-        for bname, bparams in self.params["blocks"].items():
-            if "moe" in bparams:
-                for wname in ("w_in", "w_gate", "w_out"):
-                    bparams["moe"][wname] = permute(bparams["moe"][wname])
-        base = self.expert_perm
-        self.expert_perm = perm[base] if base is not None else np.tile(
-            perm, (self.cfg.pattern_repeats, 1)
-        )
-        self.reconfig_count += 1
+    def fail_device(self, device: int) -> None:
+        """§5.4 failover: re-home the failed device's experts onto backup
+        slots through the identical decide/apply path as a routine
+        reconfiguration; subsequent plans keep only cold experts there."""
+        if self.controlplane is None:
+            raise RuntimeError(
+                "no control plane configured (MoE arch + reconfig_every > 0 required)"
+            )
+        self._apply_layer_plans(self.controlplane.fail_device(device))
+
+    def restore_device(self, device: int) -> None:
+        if self.controlplane is None:
+            raise RuntimeError(
+                "no control plane configured (MoE arch + reconfig_every > 0 required)"
+            )
+        self.controlplane.restore_device(device)
 
     # -- main loop ---------------------------------------------------------------
     def train(self, data_iter) -> list[dict]:
@@ -184,8 +224,8 @@ class Trainer:
             metrics["step_time_s"] = dt
             self.metrics_log.append(metrics)
 
-            if self.controller is not None and "expert_load" in metrics:
-                self._maybe_reconfigure(np.asarray(metrics["expert_load"]))
+            if self.controlplane is not None and "expert_load" in metrics:
+                self._reconfigure_step(np.asarray(metrics["expert_load"]))
             if t.ckpt_every and self.step % t.ckpt_every == 0:
                 self._checkpoint()
         ckpt.wait_pending()

@@ -1,0 +1,76 @@
+"""Hypothesis shim: use the real library when installed, else a tiny
+deterministic fallback.
+
+The container running tier-1 does not ship ``hypothesis``; rather than skip
+the property tests we fall back to a minimal implementation of the subset
+they use (``given``, ``settings``, ``st.integers``, ``st.sampled_from``).
+The fallback enumerates ``max_examples`` deterministic draws seeded from the
+test name, so failures reproduce exactly across runs.  With hypothesis
+installed (see requirements-dev.txt) the real engine — shrinking, the full
+strategy library — is used instead.
+"""
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        def sample(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def sample(self, rng):
+            return int(rng.integers(self.min_value, self.max_value + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng):
+            return self.options[int(rng.integers(len(self.options)))]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**30):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+    st = _Strategies()
+
+    def settings(max_examples=10, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            default_n = getattr(fn, "_compat_max_examples", 10)
+
+            def wrapper():
+                n = getattr(wrapper, "_compat_max_examples", default_n)
+                base = zlib.crc32(fn.__qualname__.encode("utf-8"))
+                for i in range(n):
+                    rng = np.random.default_rng((base + i) % 2**32)
+                    kwargs = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(**kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -8,7 +8,9 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core.collectives import hierarchical_all_to_all, flat_all_to_all, hierarchical_psum
 
-mesh = jax.make_mesh((8,), ('model',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+from repro.parallel.sharding import shard_map as _compat_shard_map
+mesh = _compat_make_mesh((8,), ('model',))
 x = jnp.arange(8 * 8 * 4, dtype=jnp.float32).reshape(8, 8 * 4)  # per-dev [8,4]
 
 def run(group):
@@ -16,19 +18,21 @@ def run(group):
         return hierarchical_all_to_all(v.reshape(8, 4), 'model', group).reshape(1, 32)
     def flat(v):
         return flat_all_to_all(v.reshape(8, 4), 'model').reshape(1, 32)
-    h = jax.shard_map(hier, mesh=mesh, in_specs=P('model'), out_specs=P('model'))(x)
-    f = jax.shard_map(flat, mesh=mesh, in_specs=P('model'), out_specs=P('model'))(x)
+    h = _compat_shard_map(hier, mesh=mesh, in_specs=P('model'), out_specs=P('model'))(x)
+    f = _compat_shard_map(flat, mesh=mesh, in_specs=P('model'), out_specs=P('model'))(x)
     np.testing.assert_array_equal(np.asarray(h), np.asarray(f)), group
 
 for g in (1, 2, 4, 8):
     run(g)
 
 # hierarchical psum == plain psum over both axes
-mesh2 = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+from repro.parallel.sharding import shard_map as _compat_shard_map
+mesh2 = _compat_make_mesh((2, 4), ('data', 'model'))
 y = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16)
-a = jax.shard_map(lambda v: hierarchical_psum(v, 'model', 'data', scatter_dim=0),
+a = _compat_shard_map(lambda v: hierarchical_psum(v, 'model', 'data', scatter_dim=0),
                   mesh=mesh2, in_specs=P(('data', 'model')), out_specs=P(('data', 'model')))(y)
-b = jax.shard_map(lambda v: jax.lax.psum(jax.lax.psum(v, 'model'), 'data'),
+b = _compat_shard_map(lambda v: jax.lax.psum(jax.lax.psum(v, 'model'), 'data'),
                   mesh=mesh2, in_specs=P(('data', 'model')), out_specs=P(('data', 'model')))(y)
 np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 print('COLLECTIVES_OK')
@@ -44,11 +48,13 @@ RING_AG = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core.collectives import ring_all_gather
-mesh = jax.make_mesh((8,), ('model',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+from repro.parallel.sharding import shard_map as _compat_shard_map
+mesh = _compat_make_mesh((8,), ('model',))
 x = jnp.arange(8 * 2 * 3, dtype=jnp.float32).reshape(8 * 2, 3)
-ring = jax.shard_map(lambda v: ring_all_gather(v, 'model'), mesh=mesh,
+ring = _compat_shard_map(lambda v: ring_all_gather(v, 'model'), mesh=mesh,
                      in_specs=P('model'), out_specs=P(None), check_vma=False)(x)
-ref = jax.shard_map(lambda v: jax.lax.all_gather(v, 'model', axis=0, tiled=True),
+ref = _compat_shard_map(lambda v: jax.lax.all_gather(v, 'model', axis=0, tiled=True),
                     mesh=mesh, in_specs=P('model'), out_specs=P(None), check_vma=False)(x)
 np.testing.assert_allclose(np.asarray(ring), np.asarray(ref))
 print('RING_OK')

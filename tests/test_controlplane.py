@@ -1,0 +1,247 @@
+"""Unified control-plane engine: per-layer decisions, permutation
+composition across repeated reconfigurations, and §5.4 failure handling
+driven through the same decide/apply path in both placement (trainer) and
+OCS (simulator) modes."""
+
+import numpy as np
+import pytest
+
+from repro.core.controlplane import ControlPlane, FailureHandler
+from repro.core.fabric import FabricConfig, make_fabric
+from repro.core.placement import inverse_permutation
+from repro.train.trainer import permute_expert_weights
+
+import jax.numpy as jnp
+
+
+def make_engine(layers=2, experts=8, devices=4, **kw):
+    kw.setdefault("use_copilot", False)
+    kw.setdefault("min_gain_fraction", 0.01)
+    return ControlPlane(layers, experts, num_devices=devices, **kw)
+
+
+def fake_block_params(layers, ev, d=3, f=2):
+    """Stacked expert weights whose values encode (layer, expert) identity."""
+    w = np.arange(layers * ev, dtype=np.float64).reshape(layers, ev, 1, 1)
+    w = np.broadcast_to(w, (layers, ev, d, f)).copy()
+    return {
+        "blocks": {
+            "0_global": {
+                "moe": {
+                    "w_in": jnp.asarray(w),
+                    "w_gate": jnp.asarray(w + 0.5),
+                    "w_out": jnp.asarray(np.swapaxes(w, 2, 3) + 0.25),
+                },
+                "norm1": jnp.zeros((layers, d)),  # non-expert leaf, untouched
+            }
+        }
+    }
+
+
+def apply_like_trainer(cp, params, plans):
+    """Mirror Trainer._apply_layer_plans: weights first, then engine perms."""
+    live = [p for p in plans if p.reconfigure]
+    inv_stack = np.tile(np.arange(cp.num_virtual), (cp.num_layers, 1))
+    for p in live:
+        inv_stack[p.layer] = inverse_permutation(p.perm)
+    params = permute_expert_weights(params, inv_stack, cp.num_virtual)
+    for p in live:
+        cp.apply(p)
+    return params
+
+
+def hot_demand(devices, experts, hot_expert, hot=60.0, seed=0):
+    """Device 0 sends a hot flow to one expert: co-locating that expert on
+    device 0 relieves the bottleneck (the example-6 scenario)."""
+    rng = np.random.default_rng(seed)
+    d = rng.random((devices, experts)) * (rng.random((devices, experts)) < 0.3)
+    d[0, hot_expert] += hot
+    return d
+
+
+# -- per-layer decisions -----------------------------------------------------
+
+
+def test_two_layers_with_different_loads_get_different_perms():
+    """The acceptance-criterion scenario: per-layer loads -> per-layer perms
+    (the regional per-layer reconfiguration the old trainer averaged away)."""
+    cp = make_engine(layers=2, experts=8, devices=4)
+    # Two hot experts sharing a device: splitting them across devices halves
+    # the hosting device's ingress — but the hot pair differs per layer.
+    load0 = np.array([30.0, 30, 1, 1, 1, 1, 1, 1])
+    load1 = np.array([1.0, 1, 1, 1, 1, 1, 30, 30.0])
+    cp.observe(0, load0)
+    cp.observe(1, load1)
+    cp.end_step()
+    plans = [cp.plan(0), cp.plan(1)]
+    assert plans[0].reconfigure and plans[1].reconfigure
+    for p in plans:
+        cp.apply(p)
+    stack = cp.perm_stack()
+    assert stack.shape == (2, 8)
+    assert (stack[0] != stack[1]).any(), stack
+    for row in stack:
+        assert sorted(row.tolist()) == list(range(8))
+
+
+def test_plan_without_observation_declines():
+    cp = make_engine()
+    plan = cp.plan(0)
+    assert not plan.reconfigure
+    assert plan.reason == "no traffic observed"
+
+
+# -- repeated reconfiguration composition (trainer regression) ---------------
+
+
+def test_repeated_reconfig_composition_router_matches_weights():
+    """After >= 2 consecutive reconfigurations, each layer's expert weights
+    must sit in exactly the slots the router's perm_stack addresses
+    (regression for the ``perm[base]`` composition ordering)."""
+    layers, experts, devices = 2, 8, 4
+    cp = make_engine(layers=layers, experts=experts, devices=devices)
+    params = fake_block_params(layers, experts)
+    original = np.asarray(params["blocks"]["0_global"]["moe"]["w_in"]).copy()
+
+    for round_, hot in enumerate(((0, 7), (5, 2), (3, 6))):
+        plans = [
+            cp.plan(l, hot_demand(devices, experts, hot[l], seed=round_))
+            for l in range(layers)
+        ]
+        assert all(p.reconfigure for p in plans), [p.reason for p in plans]
+        params = apply_like_trainer(cp, params, plans)
+
+    assert cp.reconfig_count >= 2 * layers
+    stack = cp.perm_stack()
+    w_in = np.asarray(params["blocks"]["0_global"]["moe"]["w_in"])
+    for l in range(layers):
+        assert (stack[l] != np.arange(experts)).any()  # actually moved
+        for e in range(experts):
+            # the slot the router sends expert e's tokens to holds e's weights
+            np.testing.assert_array_equal(w_in[l, stack[l][e]], original[l, e])
+    # non-expert leaves untouched
+    assert np.asarray(params["blocks"]["0_global"]["norm1"]).sum() == 0.0
+
+
+def test_permute_expert_weights_identity_rows_noop():
+    layers, experts = 3, 4
+    params = fake_block_params(layers, experts)
+    before = np.asarray(params["blocks"]["0_global"]["moe"]["w_out"]).copy()
+    inv_stack = np.tile(np.arange(experts), (layers, 1))
+    inv_stack[1] = np.array([1, 0, 3, 2])
+    params = permute_expert_weights(params, inv_stack, experts)
+    after = np.asarray(params["blocks"]["0_global"]["moe"]["w_out"])
+    np.testing.assert_array_equal(after[0], before[0])
+    np.testing.assert_array_equal(after[2], before[2])
+    np.testing.assert_array_equal(after[1], before[1][[1, 0, 3, 2]])
+
+
+# -- failure path (§5.4) through the engine ----------------------------------
+
+
+def test_failover_plans_rehome_failed_device_placement_mode():
+    layers, experts, devices = 2, 8, 4
+    cp = make_engine(layers=layers, experts=experts, devices=devices)
+    params = fake_block_params(layers, experts)
+    original = np.asarray(params["blocks"]["0_global"]["moe"]["w_in"]).copy()
+    epd = experts // devices
+
+    plans = cp.fail_device(2)
+    assert len(plans) == layers and all(p.reconfigure for p in plans)
+    params = apply_like_trainer(cp, params, plans)
+    stack = cp.perm_stack()
+    w_in = np.asarray(params["blocks"]["0_global"]["moe"]["w_in"])
+    for l in range(layers):
+        for e in range(experts):
+            if e // epd == 2:  # expert homed on the failed device
+                assert stack[l][e] // epd != 2, (l, e, stack[l])
+            # router/weight consistency survives the failover remap
+            np.testing.assert_array_equal(w_in[l, stack[l][e]], original[l, e])
+
+    # routine plans after the failure keep only cold experts parked there
+    hot = hot_demand(devices, experts, hot_expert=1, seed=3)
+    plan = cp.plan(0, hot)
+    if plan.reconfigure:
+        hot_slot = plan.perm[np.argmax(hot.sum(axis=0))]
+        assert hot_slot // epd != 2
+        cp.apply(plan)
+    cp.restore_device(2)
+    assert cp.failures.healthy_devices() == [0, 1, 2, 3]
+
+
+def test_failover_remap_through_engine():
+    """FailureHandler.remap driven through the engine's failover_slots."""
+    cp = make_engine(layers=1, experts=8, devices=4)
+    cp.fail_device(1)
+    slots = cp.failover_slots()
+    fh = cp.failures
+    for e, s in enumerate(slots):
+        assert fh.device_of_slot(int(s)) != 1
+        if e // fh.experts_per_device != 1:
+            assert s == e  # minimal movement for healthy experts
+
+
+def test_failure_handler_swap_remap_is_bounded_permutation():
+    fh = FailureHandler(num_experts=8, num_devices=4)
+    fh.fail_device(0)
+    fh.fail_device(3)
+    perm = fh.swap_remap()
+    assert sorted(perm.tolist()) == list(range(8))
+    for e in range(8):
+        if e // 2 in (0, 3):
+            assert perm[e] // 2 not in (0, 3), (e, perm)
+
+
+def test_failure_handler_all_dead():
+    fh = FailureHandler(8, 4)
+    fh.fail_device(0), fh.fail_device(1), fh.fail_device(2)
+    with pytest.raises(RuntimeError):
+        fh.fail_device(3)
+
+
+def test_simulation_failures_through_engine_degraded_but_finite():
+    """NIC + full-OCS failures injected via the engine: the simulated run
+    continues, costs stay finite, and degradation stays bounded."""
+    from repro.configs.paper_models import MIXTRAL_8X7B
+    from repro.core.netsim import simulate_training
+
+    cfg = FabricConfig(num_servers=128, link_gbps=400)
+    fab_h = make_fabric("mixnet", cfg)
+    healthy = simulate_training(MIXTRAL_8X7B, fab_h, iterations=3)
+    t_healthy = float(np.mean([r.total for r in healthy[1:]]))
+
+    fab = make_fabric("mixnet", cfg)
+    cp = ControlPlane.for_simulation(MIXTRAL_8X7B, fab)
+    cp.fail_nic(0, failed_nics=2)
+    cp.fail_device(1)
+    failed = simulate_training(
+        MIXTRAL_8X7B, fab, iterations=3, seed=1, controlplane=cp
+    )
+    t_failed = float(np.mean([r.total for r in failed[1:]]))
+    assert np.isfinite(t_failed) and t_failed > 0
+    assert all(np.isfinite(r.total) for r in failed)
+    assert t_failed < t_healthy * 1.5  # degraded, not collapsed (Fig 14)
+    assert t_failed > t_healthy * 0.9
+
+
+def test_ocs_mode_plan_requires_demand():
+    fab = make_fabric("mixnet", FabricConfig(num_servers=8))
+    cp = ControlPlane(2, 8, num_devices=4, fabric=fab, use_copilot=False)
+    with pytest.raises(ValueError):
+        cp.plan(0)
+
+
+def test_ocs_mode_hide_or_block_accounting():
+    """apply() charges only the un-hidden part of the reconfig delay."""
+    fab = make_fabric("mixnet", FabricConfig(num_servers=8, reconfig_delay_s=0.025))
+    cp = ControlPlane(2, 8, num_devices=8, fabric=fab, use_copilot=False)
+    demand = np.random.default_rng(0).random((8, 8)) * 1e9
+    # fully hidden: infinite window
+    assert cp.apply(cp.plan(0, demand)) == 0.0
+    # partially hidden: 10 ms window hides 10 of the 25 ms
+    blocked = cp.apply(cp.plan(0, demand), hide_window=0.010)
+    assert blocked == pytest.approx(0.015)
+    # no window: full delay blocks
+    blocked = cp.apply(cp.plan(0, demand), hide_window=0.0)
+    assert blocked == pytest.approx(0.025)
+    assert cp.reconfig_count == 3

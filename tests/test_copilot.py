@@ -69,6 +69,52 @@ def test_fit_matches_scipy_slsqp_objective():
     assert objective(ours.reshape(-1)) <= res.fun * 1.25 + 1e-6
 
 
+def test_batched_refit_matches_looped():
+    """The vmapped all-layers refit must reproduce the per-layer loop's
+    transitions (atol 1e-5), including ragged windows via zero-weight
+    padding."""
+    layers, e = 6, 8
+    trace = GateTraceGenerator(layers, e, seed=7)
+    monitor = TrafficMonitor(layers, e, window=8)
+    for _ in range(5):
+        loads = trace.step()
+        for l in range(layers):
+            monitor.record(l, loads[l] * 1000)
+        monitor.advance()
+    # Ragged windows: layers 0-1 get an extra observation.
+    extra = trace.step()
+    monitor.record(0, extra[0] * 1000)
+    monitor.record(1, extra[1] * 1000)
+
+    looped = CopilotPredictor(layers, e, fit_steps=80, batched_refit=False)
+    batched = CopilotPredictor(layers, e, fit_steps=80)
+    for _ in range(2):  # two rounds: the second starts from warm fits
+        looped.update(monitor)
+        batched.update(monitor)
+    np.testing.assert_allclose(
+        looped.state.transitions, batched.state.transitions, atol=1e-5
+    )
+    # columns remain distributions in both
+    assert np.allclose(batched.state.transitions.sum(axis=1), 1.0, atol=1e-4)
+
+
+def test_batched_refit_one_layer_pair():
+    """Degenerate two-layer model: the batch has exactly one element."""
+    layers, e = 2, 4
+    trace = GateTraceGenerator(layers, e, seed=2)
+    monitor = TrafficMonitor(layers, e)
+    for _ in range(4):
+        loads = trace.step()
+        for l in range(layers):
+            monitor.record(l, loads[l] * 100)
+        monitor.advance()
+    a = CopilotPredictor(layers, e, fit_steps=60, batched_refit=False)
+    b = CopilotPredictor(layers, e, fit_steps=60)
+    a.update(monitor)
+    b.update(monitor)
+    np.testing.assert_allclose(a.state.transitions, b.state.transitions, atol=1e-5)
+
+
 def test_copilot_beats_baselines_fig19():
     layers, e = 6, 16
     trace = GateTraceGenerator(layers, e, seed=3)

@@ -102,8 +102,9 @@ def test_input_specs_no_allocation():
     from repro.launch.specs import input_specs
     from jax.sharding import Mesh
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh as _compat_make_mesh
+
+    mesh = _compat_make_mesh((1, 1), ("data", "model"))
     plan = make_plan(mesh)
     for arch in ("whisper-base", "qwen2-vl-72b", "mamba2-1.3b"):
         cfg = get_config(arch)

@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models import moe as moe_mod
 from repro.models.config import ModelConfig, MoEConfig
@@ -81,7 +80,9 @@ from repro.models.config import ModelConfig, MoEConfig
 from repro.models import moe as moe_mod
 from repro.parallel.sharding import make_plan
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+from repro.launch.mesh import use_mesh as _compat_use_mesh
+mesh = _compat_make_mesh((2, 4), ('data', 'model'))
 plan = make_plan(mesh)
 plan1 = make_plan(None)
 
@@ -92,7 +93,7 @@ params, _ = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, plan)
 params1, _ = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, plan1)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
 ref, ref_st = moe_mod.moe_apply(params1, x, cfg, plan1, backend='einsum')
-with jax.set_mesh(mesh):
+with _compat_use_mesh(mesh):
     out, st = jax.jit(lambda p, v: moe_mod.moe_apply(p, v, cfg, plan, mesh=mesh, backend='mixnet'))(params, x)
 assert float(jnp.max(jnp.abs(ref - out))) < 1e-5
 np.testing.assert_allclose(np.asarray(ref_st.expert_load), np.asarray(st.expert_load))
@@ -101,7 +102,7 @@ np.testing.assert_allclose(np.asarray(ref_st.expert_load), np.asarray(st.expert_
 cfg2 = ModelConfig('t2', 'moe', 2, 32, 4, 2, 64, 128, dtype='float32',
                    moe=MoEConfig(num_experts=2, top_k=1, d_ff=48, capacity_factor=8.0, a2a_group=2))
 params2, _ = moe_mod.init_moe(jax.random.PRNGKey(2), cfg2, plan)
-with jax.set_mesh(mesh):
+with _compat_use_mesh(mesh):
     o_m, _ = jax.jit(lambda p, v: moe_mod.moe_apply(p, v, cfg2, plan, mesh=mesh, backend='mixnet'))(params2, x)
     o_e, _ = jax.jit(lambda p, v: moe_mod.moe_apply(p, v, cfg2, plan, mesh=mesh, backend='einsum'))(params2, x)
 assert float(jnp.max(jnp.abs(o_m - o_e))) < 1e-5
@@ -113,7 +114,7 @@ perm = np.array([3,1,4,0,6,2,7,5], dtype=np.int32)
 pp = dict(params)
 pp_moe = {k: (apply_placement(v, perm) if k in ('w_in','w_gate','w_out') else v)
           for k, v in params.items()}
-with jax.set_mesh(mesh):
+with _compat_use_mesh(mesh):
     out_p, _ = jax.jit(lambda p, v: moe_mod.moe_apply(p, v, cfg, plan, mesh=mesh,
                        backend='mixnet', expert_perm=jnp.asarray(perm)))(pp_moe, x)
 assert float(jnp.max(jnp.abs(out_p - ref))) < 1e-5, 'placement permutation changed the math'

@@ -3,8 +3,7 @@ headline claims (validated numerically in benchmarks; sanity-tested here)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.paper_models import MIXTRAL_8X7B, SIM_MODELS
 from repro.core import cost as costm

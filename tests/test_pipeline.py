@@ -6,7 +6,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.train.pipeline import pipeline_apply
 
 S, M, MB, D = 4, 6, 2, 8
-mesh = jax.make_mesh((S,), ('stage',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+mesh = _compat_make_mesh((S,), ('stage',))
 key = jax.random.PRNGKey(0)
 params = {'w': jax.random.normal(key, (S, D, D)) * 0.3,
           'b': jax.random.normal(key, (S, D)) * 0.1}

@@ -3,16 +3,15 @@ handler properties."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
+from repro.core.controlplane import ControlPlane, FailureHandler
 from repro.core.placement import (
     apply_placement,
     inverse_permutation,
     placement_cost,
     solve_expert_placement,
 )
-from repro.core.reconfig import FailureHandler, ReconfigController
 
 
 @given(seed=st.integers(0, 200), epd=st.sampled_from([1, 2, 4]))
@@ -54,11 +53,11 @@ def test_apply_placement_roundtrip():
         assert (np.asarray(moved["w_in"][s]) == np.asarray(w["w_in"][inv[s]])).all()
 
 
-def test_controller_hysteresis():
-    c = ReconfigController(4, 8, experts_per_device=1, min_gain_fraction=0.5)
+def test_controlplane_hysteresis():
+    cp = ControlPlane(4, 8, num_devices=8, min_gain_fraction=0.5)
     uniform = np.ones((8, 8)) / 8
-    d = c.decide(uniform)
-    assert not d.reconfigure  # no gain on uniform demand
+    plan = cp.plan(0, uniform)
+    assert not plan.reconfigure  # no gain on uniform demand
 
 
 def test_failure_handler_remap():

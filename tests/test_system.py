@@ -32,9 +32,9 @@ def test_mixnet_control_loop_reconfigures_under_skew():
     tr = Trainer(cfg, opt, tcfg, PLAN, seed=0)
     log = tr.train(iter(SyntheticLM(cfg.vocab_size, 16, 4, seed=0)))
     assert all(np.isfinite(m["loss"]) for m in log)
-    # the controller observed traffic and made decisions
-    assert tr.controller is not None
-    assert tr.controller.monitor.step == 16
+    # the control plane observed traffic and made decisions
+    assert tr.controlplane is not None
+    assert tr.controlplane.monitor.step == 16
 
 
 def test_generate_end_to_end():
@@ -59,7 +59,9 @@ from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import make_plan
 from repro.train.train_step import init_all, make_train_step, step_shardings
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+from repro.launch.mesh import use_mesh as _compat_use_mesh
+mesh = _compat_make_mesh((2, 4), ('data', 'model'))
 plan = make_plan(mesh)
 cfg = ModelConfig('md', 'moe', 2, 32, 4, 2, 0, 64, dtype='float32', remat='none',
                   moe=MoEConfig(num_experts=8, top_k=2, d_ff=32, capacity_factor=4.0,
@@ -72,7 +74,7 @@ opt_state = jax.device_put(opt_state, opt_sh)
 tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
 batch = {'tokens': jax.device_put(tokens, b_sh['tokens']),
          'labels': jax.device_put(jnp.roll(tokens, -1, 1), b_sh['labels'])}
-with jax.set_mesh(mesh):
+with _compat_use_mesh(mesh):
     step = jax.jit(make_train_step(cfg, plan, opt_cfg, mesh=mesh))
     params2, opt2, metrics = step(params, opt_state, batch)
 loss_md = float(metrics['loss'])
@@ -105,8 +107,10 @@ import jax, jax.numpy as jnp, numpy as np, tempfile, os
 from repro.train import checkpoint as ckpt
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-mesh_a = jax.make_mesh((8,), ('data',), axis_types=(jax.sharding.AxisType.Auto,))
-mesh_b = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+from repro.launch.mesh import use_mesh as _compat_use_mesh
+mesh_a = _compat_make_mesh((8,), ('data',))
+mesh_b = _compat_make_mesh((2, 4), ('data', 'model'))
 tree = {'w': jax.device_put(jnp.arange(64.0).reshape(8, 8),
                             NamedSharding(mesh_a, P('data', None)))}
 d = tempfile.mkdtemp()
@@ -128,12 +132,14 @@ from repro.models.config import ModelConfig
 from repro.models import transformer as tfm
 from repro.parallel.sharding import make_plan
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+from repro.launch.mesh import use_mesh as _compat_use_mesh
+mesh = _compat_make_mesh((2, 4), ('data', 'model'))
 plan = make_plan(mesh)
 cfg = ModelConfig('sp', 'dense', 2, 32, 8, 4, 64, 128, dtype='float32', remat='none')
 params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg, plan)
 tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
-with jax.set_mesh(mesh):
+with _compat_use_mesh(mesh):
     base, _, _ = jax.jit(lambda p, t: tfm.model_apply(p, {'tokens': t}, cfg, plan, mesh=mesh, mode='train'))(params, tokens)
     cfg_sp = dataclasses.replace(cfg, sp_shardmap=True)
     sp, _, _ = jax.jit(lambda p, t: tfm.model_apply(p, {'tokens': t}, cfg_sp, plan, mesh=mesh, mode='train'))(params, tokens)

@@ -117,11 +117,13 @@ COMPRESSED_PSUM = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.optim.compress import compressed_psum
-mesh = jax.make_mesh((8,), ('data',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh as _compat_make_mesh
+from repro.parallel.sharding import shard_map as _compat_shard_map
+mesh = _compat_make_mesh((8,), ('data',))
 x = jax.random.normal(jax.random.PRNGKey(0), (8 * 4, 16))
-exact = jax.shard_map(lambda v: jax.lax.psum(v, 'data'), mesh=mesh,
+exact = _compat_shard_map(lambda v: jax.lax.psum(v, 'data'), mesh=mesh,
                       in_specs=P('data'), out_specs=P('data'))(x)
-approx = jax.shard_map(lambda v: compressed_psum(v, 'data'), mesh=mesh,
+approx = _compat_shard_map(lambda v: compressed_psum(v, 'data'), mesh=mesh,
                        in_specs=P('data'), out_specs=P('data'))(x)
 rel = float(jnp.max(jnp.abs(exact - approx)) / (jnp.max(jnp.abs(exact)) + 1e-9))
 assert rel < 0.05, rel
@@ -132,6 +134,43 @@ print('COMPRESSED_PSUM_OK')
 def test_compressed_psum_multidevice(multidevice):
     out = multidevice(COMPRESSED_PSUM, devices=8)
     assert "COMPRESSED_PSUM_OK" in out
+
+
+def test_trainer_per_layer_reconfig_distinct_perms():
+    """Two layers with different hot-expert pairs must receive *different*
+    expert permutations (the per-layer decisions the old trainer averaged
+    into one global perm), and training must continue through them."""
+    from repro.core.controlplane import ControlPlane
+
+    cfg = ModelConfig(
+        "tiny-moe8", "moe", 2, 32, 4, 2, 0, 64, dtype="float32", remat="none",
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff=32, capacity_factor=2.0,
+                      backend="mixnet"),
+    )
+    opt = AdamWConfig(lr=1e-3)
+    tcfg = TrainerConfig(total_steps=4, reconfig_every=1, reconfig_min_gain=0.01)
+    tr = Trainer(cfg, opt, tcfg, PLAN, seed=0)
+    reps = tr.controlplane.num_layers
+    assert reps == 2
+    # Pretend a 4-device EP region (experts_per_device=2) so placement has
+    # freedom; the weight-permute path is identical regardless of sharding.
+    tr.controlplane = ControlPlane(
+        num_layers=reps, num_experts=cfg.moe.num_experts, num_devices=4,
+        use_copilot=False, min_gain_fraction=0.01,
+    )
+    loads = np.array([
+        [30.0, 30.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0],
+        [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 30.0, 30.0],
+    ])
+    tr.step = tcfg.reconfig_every  # align the modulo so planning runs now
+    tr._reconfigure_step(loads)
+    stack = np.asarray(tr.expert_perm)
+    assert (stack[0] != np.arange(8)).any(), stack  # layer 0 reconfigured
+    assert (stack[0] != stack[1]).any(), stack  # and differently from layer 1
+    assert tr.reconfig_count >= 2
+    # training continues with distinct per-layer perms threaded to the router
+    log = tr.train(iter(SyntheticLM(cfg.vocab_size, 16, 4, seed=0)))
+    assert np.isfinite([float(m["loss"]) for m in log]).all()
 
 
 def test_trainer_straggler_watchdog():

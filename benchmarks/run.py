@@ -20,6 +20,7 @@ claims, next to the paper's value:
   fig27_optical_degree     optical degree sweep (Fig 27)
   fig28_reconfig_latency   reconfiguration latency sweep (Fig 28)
   copilot_refit            batched vs looped COPILOT refit (BENCH_copilot.json)
+  moe_dispatch             sort-based vs one-hot dispatch (BENCH_moe_dispatch.json)
   kernels                  Pallas-kernel oracle timings (framework table)
 """
 
@@ -412,6 +413,98 @@ def copilot_refit(fast=False):
         json.dump(history, f, indent=2)
 
 
+def moe_dispatch(fast=False):
+    """Sort-based vs one-hot MoE dispatch at the paper-scale T=16384, E=64.
+
+    Both paths build the same ``[E·C, D]`` capacity-layout dispatch buffers
+    from identical router choices; the one-hot baseline computes in-bucket
+    ranks with the historical O(T·E) ``one_hot``+``cumsum`` machinery, the
+    sort path with the routing core's O(N log N) stable argsort
+    (``repro.models.routing.bucket_ranks``).  Also times the dropless block
+    layout (argsort + block padding, the MegaBlocks-style default).  Records
+    the ratio into BENCH_moe_dispatch.json (repo root)."""
+    import json
+    import os
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.models import routing
+
+    t = 4096 if fast else 16384
+    e, k, d = 64, 2, 128
+    n = t * k
+    cap = routing.capacity(t, k, e, 1.25)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (t, d))
+    logits = jax.random.normal(jax.random.PRNGKey(1), (t, e))
+    _, idx = jax.lax.top_k(logits, k)
+    dest = idx.reshape(n)
+    src_rows = jnp.arange(n, dtype=jnp.int32) // k
+
+    @jax.jit
+    def onehot_path(x, dest):
+        oh = jax.nn.one_hot(dest, e, dtype=jnp.int32)
+        pos = jnp.cumsum(oh, axis=0) - oh
+        rank = jnp.sum(pos * oh, axis=1)
+        keep = rank < cap
+        slot = jnp.where(keep, dest * cap + rank, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(
+            jnp.where(keep[:, None], x[src_rows], 0)
+        )
+        return buf[:-1]
+
+    @jax.jit
+    def sort_path(x, dest):
+        rank, _ = routing.bucket_ranks(dest, e)
+        plan = routing.capacity_plan(dest, rank, None, e, cap)
+        src = jnp.where(plan.src >= 0, plan.src // k, -1)
+        return ops.moe_dispatch(x, src, backend="ref")
+
+    @jax.jit
+    def sort_dropless_path(x, dest):
+        rank, counts = routing.bucket_ranks(dest, e)
+        plan = routing.dropless_plan(dest, rank, counts, None, e, 64)
+        src = jnp.where(plan.src >= 0, plan.src // k, -1)
+        return ops.moe_dispatch(x, src, backend="ref")
+
+    err = float(jnp.max(jnp.abs(onehot_path(x, dest) - sort_path(x, dest))))
+    us_onehot = _timeit(lambda: jax.block_until_ready(onehot_path(x, dest)), reps=5)
+    us_sort = _timeit(lambda: jax.block_until_ready(sort_path(x, dest)), reps=5)
+    us_dropless = _timeit(
+        lambda: jax.block_until_ready(sort_dropless_path(x, dest)), reps=5
+    )
+    speedup = us_onehot / max(us_sort, 1e-9)
+    _row(
+        f"moe_dispatch/T{t}_E{e}", us_sort,
+        f"onehot_ms={us_onehot/1e3:.2f} sort_ms={us_sort/1e3:.2f} "
+        f"dropless_ms={us_dropless/1e3:.2f} speedup={speedup:.2f}x "
+        f"max_dev={err:.1e} (sort must beat one-hot)",
+    )
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_moe_dispatch.json")
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append({
+        "bench": "moe_dispatch",
+        "tokens": t,
+        "experts": e,
+        "top_k": k,
+        "d_model": d,
+        "capacity": cap,
+        "onehot_us": round(us_onehot, 1),
+        "sort_us": round(us_sort, 1),
+        "sort_dropless_us": round(us_dropless, 1),
+        "speedup": round(speedup, 3),
+        "max_deviation": err,
+    })
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
 def kernels(fast=False):
     """Framework table: Pallas kernels validated against oracles (interpret)
     + oracle-path timings on CPU."""
@@ -497,6 +590,7 @@ ALL = {
     "fig27_optical_degree": fig27_optical_degree,
     "fig28_reconfig_latency": fig28_reconfig_latency,
     "copilot_refit": copilot_refit,
+    "moe_dispatch": moe_dispatch,
     "kernels": kernels,
     "beyond_placement": beyond_placement,
     "beyond_a2a_hierarchy": beyond_a2a_hierarchy,

@@ -1,10 +1,17 @@
 """Grouped (per-expert) matmul Pallas kernel — the MoE expert-FFN hot spot.
 
-After capacity-based dispatch every device holds ``x[E_local, C, D]`` token
-buffers and stacked expert weights ``w[E_local, D, F]``.  The kernel tiles
-``(C, F)`` output blocks into VMEM with a ``D``-step accumulation loop so the
-MXU sees aligned ``(bc x bd) @ (bd x bf)`` tiles and the working set
-(``bc*bd + bd*bf + bc*bf`` elements) stays inside the ~16 MB VMEM budget.
+Two layouts, one accumulation scheme:
+
+* capacity dispatch leaves ``x[E_local, C, D]`` per-expert buffers next to
+  stacked weights ``w[E_local, D, F]`` (``grouped_matmul_pallas``);
+* dropless sort-based dispatch (:mod:`repro.models.routing`) leaves a
+  block-padded ``x[n, B, D]`` row-tile layout plus a block->expert map
+  (``grouped_matmul_blocks_pallas``, scalar-prefetched weight indexing).
+
+Either way the kernel tiles output blocks into VMEM with a ``D``-step
+accumulation loop so the MXU sees aligned ``(bc x bd) @ (bd x bf)`` tiles and
+the working set (``bc*bd + bd*bf + bc*bf`` elements) stays inside the ~16 MB
+VMEM budget.
 
 TPU is the target; CPU validation runs in ``interpret=True`` mode against
 :func:`repro.kernels.ref.grouped_matmul`.
@@ -19,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["grouped_matmul_pallas", "pick_block"]
+__all__ = ["grouped_matmul_pallas", "grouped_matmul_blocks_pallas", "pick_block"]
 
 
 def pick_block(dim: int, target: int) -> int:
@@ -83,3 +90,64 @@ def grouped_matmul_pallas(
         scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
         interpret=interpret,
     )(x, w)
+
+
+def _gmm_blocks_kernel(be_ref, x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    """One (row-block, f-block) output tile; grid axis 2 walks D.  The weight
+    block is addressed by the scalar-prefetched block->expert map, so each
+    row tile multiplies against *its own* expert's weights — the MegaBlocks
+    dropless layout with no per-expert padding to a common capacity."""
+    del be_ref  # consumed by the index maps
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "bd", "interpret"))
+def grouped_matmul_blocks_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    block_experts: jax.Array,
+    *,
+    bf: int = 128,
+    bd: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """``[n, B, D] @ w[block_experts[n], D, F] -> [n, B, F]``.
+
+    ``x`` is the block-padded dropless token layout from
+    :func:`repro.models.routing.dropless_plan`: ``n`` row tiles of ``B``
+    tokens, tile ``i`` owned entirely by expert ``block_experts[i]``.
+    """
+    n, b, d = x.shape
+    e, d2, f = w.shape
+    if d != d2:
+        raise ValueError(f"shape mismatch {x.shape} @ {w.shape}")
+    bf = pick_block(f, bf)
+    bd = pick_block(d, bd)
+    k_steps = d // bd
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, f // bf, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, b, bd), lambda ni, fi, ki, be: (ni, 0, ki)),
+            pl.BlockSpec((1, bd, bf), lambda ni, fi, ki, be: (be[ni], ki, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, b, bf), lambda ni, fi, ki, be: (ni, 0, fi)),
+        scratch_shapes=[pltpu.VMEM((b, bf), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_gmm_blocks_kernel, k_steps=k_steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, b, f), x.dtype),
+        interpret=interpret,
+    )(block_experts.astype(jnp.int32), x, w)

@@ -15,12 +15,16 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.grouped_matmul import (
+    grouped_matmul_blocks_pallas,
+    grouped_matmul_pallas,
+)
+from repro.kernels.moe_dispatch import moe_combine_pallas, moe_dispatch_pallas
 from repro.kernels.topk_gating import topk_gating_pallas
 
 __all__ = [
-    "grouped_matmul", "topk_gating", "flash_attention", "rmsnorm",
-    "ssd_chunk", "on_tpu",
+    "grouped_matmul", "topk_gating", "moe_dispatch", "moe_combine",
+    "flash_attention", "rmsnorm", "ssd_chunk", "on_tpu",
 ]
 
 
@@ -40,11 +44,38 @@ def _resolve_simple(backend: str) -> str:
     return "ref" if mode == "chunked" else mode
 
 
-def grouped_matmul(x, w, *, backend: str = "auto"):
+def grouped_matmul(x, w, *, block_experts=None, backend: str = "auto"):
+    """Per-expert GEMM.  ``block_experts=None``: capacity layout ``[E, C, D]``
+    against ``w [E, D, F]``; with a ``[n]`` block->expert map: dropless block
+    layout ``[n, B, D]`` (rows of tile ``i`` use ``w[block_experts[i]]``)."""
+    mode = _resolve_simple(backend)
+    if block_experts is None:
+        if mode == "pallas":
+            return grouped_matmul_pallas(x, w, interpret=not on_tpu())
+        return ref.grouped_matmul(x, w)
+    if mode == "pallas":
+        return grouped_matmul_blocks_pallas(
+            x, w, block_experts, interpret=not on_tpu()
+        )
+    return ref.grouped_matmul_blocks(x, w, block_experts)
+
+
+def moe_dispatch(x, src, *, backend: str = "auto"):
+    """Gather token rows ``x [T, D]`` into a packed layout by ``src [P]``
+    (i32 source row per slot, -1 = empty -> zeros)."""
     mode = _resolve_simple(backend)
     if mode == "pallas":
-        return grouped_matmul_pallas(x, w, interpret=not on_tpu())
-    return ref.grouped_matmul(x, w)
+        return moe_dispatch_pallas(x, src, interpret=not on_tpu())
+    return ref.moe_dispatch(x, src)
+
+
+def moe_combine(y, slot, weights, *, backend: str = "auto"):
+    """Weighted combine of packed rows ``y [P, D]`` back to token order via
+    ``slot``/``weights [T, S]`` (f32 result; ``slot < 0`` terms skipped)."""
+    mode = _resolve_simple(backend)
+    if mode == "pallas":
+        return moe_combine_pallas(y, slot, weights, interpret=not on_tpu())
+    return ref.moe_combine(y, slot, weights)
 
 
 def topk_gating(logits, k: int, *, backend: str = "auto"):

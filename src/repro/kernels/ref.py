@@ -13,6 +13,9 @@ import jax.numpy as jnp
 
 __all__ = [
     "grouped_matmul",
+    "grouped_matmul_blocks",
+    "moe_dispatch",
+    "moe_combine",
     "topk_gating",
     "flash_attention",
     "flash_attention_chunked",
@@ -25,6 +28,53 @@ def grouped_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
         "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
     )
     return out.astype(x.dtype)
+
+
+def grouped_matmul_blocks(
+    x: jax.Array, w: jax.Array, block_experts: jax.Array
+) -> jax.Array:
+    """Block-wise grouped GEMM: ``[n, B, D] @ w[block_experts[n], D, F]``.
+
+    Oracle for the dropless (MegaBlocks) layout: a ``lax.scan`` over row
+    tiles gathers ONE expert's ``[D, F]`` weights per step, so peak memory
+    stays O(D·F) instead of materializing the ``[n, D, F]`` weight gather.
+    """
+
+    def step(_, xs):
+        xb, be = xs
+        yb = xb.astype(jnp.float32) @ w[be].astype(jnp.float32)
+        return _, yb.astype(x.dtype)
+
+    _, out = jax.lax.scan(step, None, (x, block_experts))
+    return out
+
+
+def moe_dispatch(x: jax.Array, src: jax.Array) -> jax.Array:
+    """Gather token rows into a packed dispatch layout.
+
+    Args:
+      x: ``[T, D]`` token rows.
+      src: ``[P]`` i32 source row per packed slot, -1 for empty/padding.
+    Returns:
+      ``[P, D]``: ``x[src[p]]`` where ``src[p] >= 0``, zeros elsewhere.
+    """
+    rows = jnp.take(x, jnp.clip(src, 0, x.shape[0] - 1), axis=0)
+    return jnp.where(src[:, None] >= 0, rows, 0).astype(x.dtype)
+
+
+def moe_combine(y: jax.Array, slot: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted combine back to token order (f32 accumulation).
+
+    Args:
+      y: ``[P, D]`` packed expert outputs.
+      slot: ``[T, S]`` i32 packed row per (token, choice), -1 if dropped.
+      weights: ``[T, S]`` combine weights.
+    Returns:
+      ``[T, D]`` f32: ``out[t] = Σ_s w[t,s] · y[slot[t,s]]`` over kept terms.
+    """
+    rows = jnp.take(y, jnp.clip(slot, 0, y.shape[0] - 1), axis=0)  # [T, S, D]
+    w = jnp.where(slot >= 0, weights.astype(jnp.float32), 0.0)
+    return jnp.sum(rows.astype(jnp.float32) * w[..., None], axis=1)
 
 
 def topk_gating(logits: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:

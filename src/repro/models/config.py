@@ -31,6 +31,13 @@ class MoEConfig:
     backend: str = "einsum"
     # Hierarchical a2a group size (scale-up stage width) for the mixnet path.
     a2a_group: int = 4
+    # Token-dispatch semantics (repro.models.routing): "dropless" routes every
+    # token (MegaBlocks-style sort-based layout, static shapes; capacity_factor
+    # ignored) or "capacity" drops overflow beyond the capacity_factor buffers.
+    dispatch: str = "dropless"
+    # Row-tile height of the dropless block layout (the grouped GEMM's unit of
+    # expert ownership; 8 = f32 sublane minimum, raise towards 128 for MXU).
+    dispatch_block: int = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,6 +216,7 @@ class ModelConfig:
         _ = self.pattern_repeats
         if self.is_moe:
             assert self.moe.top_k <= self.moe.num_experts
+            assert self.moe.dispatch in ("dropless", "capacity")
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

@@ -1,15 +1,22 @@
-"""Mixture-of-Experts layer with two dispatch backends.
+"""Mixture-of-Experts layer: three dispatch backends, one routing core.
 
-``einsum``  — GShard-style dense dispatch/combine einsums.  Fully
+All router math and token ordering lives in :mod:`repro.models.routing` (the
+sort-based dropless engine, DESIGN.md §6); this module owns the three
+*execution strategies* layered on top of it:
+
+``einsum``  — GShard-style dense dispatch/combine einsums, with the
+  dispatch masks built from the shared sort-based ranks.  Fully
   auto-shardable under pjit (the expert dim rides the ``model`` axis and XLA
   inserts the all-to-alls): this is the *paper-faithful baseline* a static
   fabric serves.
 
 ``mixnet``  — the paper's data plane (§5.3) as an explicit ``shard_map``
-  program over the ``model`` axis: tokens are sorted into per-destination
-  send buffers, exchanged with the **hierarchical delegation all-to-all**
-  (:func:`repro.core.collectives.mixnet_all_to_all`), computed with the
-  grouped Pallas GEMM, and returned the same way.  EP traffic never leaves
+  program over the ``model`` axis: tokens are gathered into per-destination
+  send buffers (``ops.moe_dispatch``), exchanged with the **hierarchical
+  delegation all-to-all** (:func:`repro.core.collectives.mixnet_all_to_all`),
+  packed by local expert and computed with the grouped Pallas GEMM
+  (``ops.grouped_matmul`` — capacity buffers or the dropless block layout),
+  and returned the same way (``ops.moe_combine``).  EP traffic never leaves
   the ``model`` axis — the regional locality the measurement study (§3)
   found.  Runtime expert re-placement (the OCS-reconfiguration analogue) is
   realized by permuting expert->slot assignments *per layer*: the control
@@ -21,6 +28,21 @@
   the wire protocol itself never changes, exactly like pushing a per-region
   cross-map to the OCS.
 
+``dense_decode`` — decode-time weight-stationary path: ALL experts computed
+  densely on the handful of live tokens, combined with the routing core's
+  virtual-slot gate map (which also applies ``expert_perm``, so decode stays
+  correct after a runtime reconfiguration).
+
+Dispatch semantics (``cfg.moe.dispatch``): **dropless** (default) routes
+every token — the einsum backend sizes its dense buffers at the worst case
+(~E/(top_k·capacity_factor)× the capacity-mode FFN rows: fine for parity
+validation and small models, use capacity mode or the mixnet backend at
+scale), the mixnet backend packs the MegaBlocks block layout (dropless
+without the padding) — while **capacity** keeps the classic capacity-factor
+buffers and drops overflow (bounded wire traffic for the sharded
+all-to-all).  ``dropped_fraction`` telemetry counts losses from *every*
+stage of a backend's pipeline.
+
 Virtual experts (DESIGN.md §5): when E < model-axis size P, every expert is
 split into r = P/E tensor shards; a token is dispatched to all r shards of
 its expert and the combine sums the partial products, restoring the
@@ -30,29 +52,17 @@ assigned architecture (grok-1: 8 experts -> 16 virtual on a 16-wide axis).
 
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import mixnet_all_to_all
 from repro.kernels import ops
+from repro.models import routing
+from repro.models.routing import MoEStats, router_losses
 from repro.parallel.sharding import ShardingPlan, constrain, shard_map, virtual_experts
 
 __all__ = ["init_moe", "moe_apply", "MoEStats", "router_losses"]
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class MoEStats:
-    """Per-layer telemetry consumed by the MixNet control plane (§5.1)."""
-
-    expert_load: jax.Array  # [E] tokens routed to each (real) expert
-    balance_loss: jax.Array
-    z_loss: jax.Array
-    dropped_fraction: jax.Array
 
 
 # ---------------------------------------------------------------------------
@@ -101,32 +111,20 @@ def init_moe(key, cfg, plan: ShardingPlan):
 
 
 # ---------------------------------------------------------------------------
-# routing helpers
+# shared helpers
 # ---------------------------------------------------------------------------
 
 
-def router_losses(logits: jax.Array, idx: jax.Array, num_experts: int):
-    """Switch-style balance loss + router z-loss (both f32 scalars)."""
-    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    mean_prob = probs.reshape(-1, num_experts).mean(axis=0)
-    counts = jax.nn.one_hot(idx.reshape(-1), num_experts, dtype=jnp.float32).sum(0)
-    frac = counts / jnp.maximum(counts.sum(), 1.0)
-    balance = num_experts * jnp.sum(frac * mean_prob)
-    z = jnp.mean(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1) ** 2)
-    return balance, z
-
-
-def _capacity(tokens: int, top_k: int, num_experts: int, factor: float) -> int:
-    c = int(np.ceil(tokens * top_k * factor / num_experts))
-    return max(4, int(np.ceil(c / 4) * 4))
+def _actfn(act: str):
+    return jax.nn.silu if act in ("silu", "swiglu") else jax.nn.gelu
 
 
 def _expert_ffn(x, w_in, w_gate, w_out, act):
-    """x [..., E, C, D] grouped through per-expert SwiGLU."""
+    """x [..., E, C, D] grouped through per-expert SwiGLU (einsum form, for
+    the pjit-partitioned dense backends)."""
     h = jnp.einsum("...ecd,edf->...ecf", x, w_in)
     g = jnp.einsum("...ecd,edf->...ecf", x, w_gate)
-    actfn = jax.nn.silu if act in ("silu", "swiglu") else jax.nn.gelu
-    h = actfn(g) * h
+    h = _actfn(act)(g) * h
     return jnp.einsum("...ecf,efd->...ecd", h, w_out)
 
 
@@ -135,10 +133,11 @@ def _expert_ffn(x, w_in, w_gate, w_out, act):
 # ---------------------------------------------------------------------------
 
 
-def _moe_einsum(params, x, cfg, plan: ShardingPlan, mesh=None):
+def _moe_einsum(params, x, cfg, plan: ShardingPlan, mesh=None, expert_perm=None):
     e = cfg.moe
     b, s, d = x.shape
     ev, r = virtual_experts(e.num_experts, plan.model_size)
+    sc = e.top_k * r
     # Token groups: one group per sequence shard so the dispatch einsum's
     # quadratic term stays bounded and group boundaries match the sharding.
     g = plan.model_size if (plan.model_size > 1 and s % plan.model_size == 0) else 1
@@ -152,41 +151,48 @@ def _moe_einsum(params, x, cfg, plan: ShardingPlan, mesh=None):
     # the mixnet backend's true hierarchical a2a improves on (§Perf).
     xg = constrain(xg, mesh, P(gspec, None, None))
     logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
-    weights, idx = ops.topk_gating(logits.reshape(-1, e.num_experts), e.top_k)
-    weights = weights.reshape(b * g, t, e.top_k)
-    idx = idx.reshape(b * g, t, e.top_k)
-    # Renormalize the kept top-k weights (standard for k>1 routers).
-    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
-
-    cap = _capacity(t, e.top_k, e.num_experts, e.capacity_factor)
-    onehot = jax.nn.one_hot(idx, e.num_experts, dtype=jnp.float32)  # [G,T,K,E]
-    # Position of each (token, choice) within its expert's capacity buffer.
-    flat = onehot.reshape(b * g, t * e.top_k, e.num_experts)
-    pos = jnp.cumsum(flat, axis=1) - flat  # rank among same-expert picks
-    pos = pos.reshape(b * g, t, e.top_k, e.num_experts)
-    keep = (pos < cap) * onehot
-    dropped = 1.0 - keep.sum() / (b * g * t * e.top_k)
-    pos_oh = jax.nn.one_hot(
-        jnp.minimum(pos, cap - 1).astype(jnp.int32), cap, dtype=jnp.float32
+    info = routing.compute_routing(
+        logits.reshape(-1, e.num_experts),
+        top_k=e.top_k,
+        num_virtual=ev,
+        replication=r,
+        expert_perm=expert_perm,
     )
-    dispatch = jnp.einsum("gtke,gtkec->gtec", keep, pos_oh)  # [G,T,E,C]
-    combine = jnp.einsum("gtke,gtkec,gtk->gtec", keep, pos_oh, weights)
+    vdest = info.vdest.reshape(b * g, t * sc)
+    wfull = info.wfull.reshape(b * g, t, sc)
 
-    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)  # [G,E,C,D]
-    if r > 1:
-        xe = jnp.repeat(xe, r, axis=1)  # duplicate to all r virtual shards
+    # Per-virtual-slot capacity: a slot can receive at most t tokens (top-k
+    # indices are distinct), so cap = t is exactly dropless; capacity mode
+    # keeps the classic factor-bounded buffers and drops overflow.  Dense
+    # dropless is inherently padded-worst-case — buffers and expert-FFN rows
+    # grow by ~E/(top_k·capacity_factor) over capacity mode, the waste
+    # MegaBlocks measures — so at scale run this baseline in capacity mode
+    # (or use the mixnet backend, whose block layout is dropless WITHOUT the
+    # padding).
+    if e.dispatch == "dropless":
+        cap = t
+    else:
+        cap = routing.capacity(t, e.top_k, e.num_experts, e.capacity_factor)
+    rank, _ = jax.vmap(lambda dv: routing.bucket_ranks(dv, ev))(vdest)
+    vdest = vdest.reshape(b * g, t, sc)
+    rank = rank.reshape(b * g, t, sc)
+    keep = rank < cap
+    dispatch, combine = routing.dense_dispatch_masks(
+        vdest, rank, keep, wfull, ev, cap
+    )
+    dropped = 1.0 - keep.sum() / (b * g * t * sc)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)  # [G,Ev,C,D]
     ex_ax = plan.dim_axis(ev)
     xe = constrain(xe, mesh, P(gspec, ex_ax, None, None))
     ye = _expert_ffn(xe, params["w_in"], params["w_gate"], params["w_out"], cfg.act)
     ye = constrain(ye, mesh, P(gspec, ex_ax, None, None))
-    if r > 1:
-        ye = ye.reshape(b * g, e.num_experts, r, cap, d).sum(axis=2)
     out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
     out = out.reshape(b, s, d)
 
-    balance, z = router_losses(logits, idx, e.num_experts)
-    load = jax.nn.one_hot(idx.reshape(-1), e.num_experts, dtype=jnp.float32).sum(0)
-    stats = MoEStats(load, balance, z, dropped)
+    balance, z = router_losses(logits, info.idx, e.num_experts)
+    load = routing.expert_load(info.idx, e.num_experts)
+    stats = MoEStats(load, balance, z, dropped.astype(jnp.float32))
     return out, stats
 
 
@@ -195,62 +201,40 @@ def _moe_einsum(params, x, cfg, plan: ShardingPlan, mesh=None):
 # ---------------------------------------------------------------------------
 
 
-def _pack_by_expert(tokens, expert_ids, valid, num_local, capacity):
-    """Scatter ``tokens [N, D]`` into ``[num_local, capacity, D]`` buffers by
-    local expert id; returns (packed, slot, keep) where ``slot`` maps each
-    source row to its buffer slot for the unpack (fixed shapes, overflow
-    dropped)."""
-    n, d = tokens.shape
-    onehot = jax.nn.one_hot(expert_ids, num_local, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - onehot  # [N, E_local]
-    my_pos = jnp.sum(pos * onehot, axis=1)
-    keep = valid & (my_pos < capacity)
-    slot = jnp.where(keep, expert_ids * capacity + my_pos, num_local * capacity)
-    packed = jnp.zeros((num_local * capacity + 1, d), tokens.dtype)
-    packed = packed.at[slot].set(jnp.where(keep[:, None], tokens, 0))
-    packed = packed[:-1].reshape(num_local, capacity, d)
-    return packed, slot, keep
-
-
 def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, axis_names):
     """Per-device MoE body (runs inside shard_map, or standalone at P=1)."""
     e = cfg.moe
     ev, r = virtual_experts(e.num_experts, plan.model_size)
     p_axis = max(plan.model_size, 1)
     ev_local = ev // p_axis
+    dropless = e.dispatch == "dropless"
     router, w_in, w_gate, w_out = params_local
     bl, sl, d = xl.shape
     tl = bl * sl
+    sc = e.top_k * r
+    n = tl * sc
     xt = xl.reshape(tl, d)
 
     logits = xt.astype(jnp.float32) @ router
-    weights, idx = ops.topk_gating(logits, e.top_k)
-    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
-    # Virtual destinations: choice (t, k) -> r shard targets, re-addressed by
-    # the runtime placement permutation (expert_perm[v] = physical slot).
-    vdest = (idx[..., None] * r + jnp.arange(r)).reshape(tl, e.top_k * r)
-    vdest = expert_perm[vdest]
-    wfull = jnp.repeat(weights, r, axis=-1)
-    dest_dev = vdest // ev_local
-    local_e = vdest % ev_local
+    info = routing.compute_routing(
+        logits, top_k=e.top_k, num_virtual=ev, replication=r,
+        expert_perm=expert_perm,
+    )
+    flat_dev = (info.vdest // ev_local).reshape(n)
+    local_e = (info.vdest % ev_local).reshape(n)
 
-    # --- send buffers [P, Cp, D] + expert-id metadata ----------------------
-    cp = _capacity(tl, e.top_k * r, p_axis, e.capacity_factor)
-    flat_dev = dest_dev.reshape(-1)
-    oh = jax.nn.one_hot(flat_dev, p_axis, dtype=jnp.int32)
-    pos = jnp.cumsum(oh, axis=0) - oh
-    my_pos = jnp.sum(pos * oh, axis=1)
-    keep = my_pos < cp
-    slot = jnp.where(keep, flat_dev * cp + my_pos, p_axis * cp)
-    src_rows = jnp.repeat(jnp.arange(tl), e.top_k * r)
-    send_x = jnp.zeros((p_axis * cp + 1, d), xl.dtype).at[slot].set(
-        jnp.where(keep[:, None], xt[src_rows], 0)
-    )
-    send_e = jnp.full((p_axis * cp + 1,), -1, jnp.int32).at[slot].set(
-        jnp.where(keep, local_e.reshape(-1), -1)
-    )
-    send_x = send_x[:-1].reshape(p_axis, cp, d)
-    send_e = send_e[:-1].reshape(p_axis, cp)
+    # --- stage 1: send buffers [P, Cp, D] + expert-id metadata -------------
+    # Dropless sizes the per-destination buffer at the worst case (all n
+    # choices to one device) so nothing overflows; capacity mode bounds the
+    # wire bytes of the a2a instead.
+    cp = n if dropless else routing.capacity(tl, sc, p_axis, e.capacity_factor)
+    rank1, _ = routing.bucket_ranks(flat_dev, p_axis)
+    plan1 = routing.capacity_plan(flat_dev, rank1, None, p_axis, cp)
+    src_tok = jnp.where(plan1.src >= 0, plan1.src // sc, -1)
+    send_x = ops.moe_dispatch(xt, src_tok).reshape(p_axis, cp, d)
+    send_e = jnp.where(
+        plan1.src >= 0, local_e[jnp.clip(plan1.src, 0, n - 1)], -1
+    ).reshape(p_axis, cp).astype(jnp.int32)
 
     # --- hierarchical delegation all-to-all (the MixNet fabric) ------------
     if p_axis > 1:
@@ -259,55 +243,63 @@ def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, ax
     else:
         recv_x, recv_e = send_x, send_e
 
-    # --- pack by local expert, grouped FFN, unpack --------------------------
+    # --- stage 2: pack by local expert, grouped Pallas GEMM, unpack ---------
     rx = recv_x.reshape(p_axis * cp, d)
     re = recv_e.reshape(p_axis * cp)
-    c2 = _capacity(p_axis * cp, 1, ev_local, e.capacity_factor)
-    packed, slot2, keep2 = _pack_by_expert(rx, jnp.maximum(re, 0), re >= 0, ev_local, c2)
-    ye = _expert_ffn(packed[None], w_in, w_gate, w_out, cfg.act)[0]
-    flat_y = jnp.concatenate(
-        [ye.reshape(ev_local * c2, d), jnp.zeros((1, d), ye.dtype)], axis=0
-    )
-    back = jnp.where(keep2[:, None], flat_y[jnp.minimum(slot2, ev_local * c2)], 0.0)
+    valid = re >= 0
+    rank2, counts2 = routing.bucket_ranks(re, ev_local, valid=valid)
+    act = _actfn(cfg.act)
+    if dropless:
+        plan2 = routing.dropless_plan(
+            re, rank2, counts2, valid, ev_local, e.dispatch_block
+        )
+        packed = ops.moe_dispatch(rx, plan2.src).reshape(-1, e.dispatch_block, d)
+        be = plan2.block_experts
+        h = ops.grouped_matmul(packed, w_in, block_experts=be)
+        gt = ops.grouped_matmul(packed, w_gate, block_experts=be)
+        ye = ops.grouped_matmul(act(gt) * h, w_out, block_experts=be)
+    else:
+        c2 = routing.capacity(p_axis * cp, 1, ev_local, e.capacity_factor)
+        plan2 = routing.capacity_plan(re, rank2, valid, ev_local, c2)
+        packed = ops.moe_dispatch(rx, plan2.src).reshape(ev_local, c2, d)
+        h = ops.grouped_matmul(packed, w_in)
+        gt = ops.grouped_matmul(packed, w_gate)
+        ye = ops.grouped_matmul(act(gt) * h, w_out)
+    back = ops.moe_dispatch(ye.reshape(plan2.num_rows, d), plan2.slot)
     back = back.reshape(p_axis, cp, d)
 
     # --- return trip + weighted combine -------------------------------------
     ret = mixnet_all_to_all(back, "model", e.a2a_group) if p_axis > 1 else back
-    flat_ret = jnp.concatenate(
-        [ret.reshape(p_axis * cp, d), jnp.zeros((1, d), ret.dtype)], axis=0
+    out = ops.moe_combine(
+        ret.reshape(p_axis * cp, d), plan1.slot.reshape(tl, sc), info.wfull
     )
-    contrib = flat_ret[jnp.minimum(slot, p_axis * cp)] * keep[:, None]
-    contrib = contrib.reshape(tl, e.top_k * r, d)
-    out = jnp.sum(contrib * wfull[..., None].astype(contrib.dtype), axis=1)
     out = out.reshape(bl, sl, d).astype(xl.dtype)
 
-    balance, z = router_losses(logits, idx, e.num_experts)
-    load = jax.nn.one_hot(idx.reshape(-1), e.num_experts, dtype=jnp.float32).sum(0)
-    drop = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    balance, z = router_losses(logits, info.idx, e.num_experts)
+    load = routing.expert_load(info.idx, e.num_experts)
+    # Drop telemetry folds BOTH stages: plan2.kept counts received rows that
+    # won an expert slot, i.e. choices that survived the send-buffer stage
+    # AND the pack stage (stage-1 drops never arrive).  psum'ing kept and
+    # offered over the mesh yields the global realized loss the control
+    # plane acts on (exactly 0 in dropless mode).
+    kept = plan2.kept.astype(jnp.float32)
+    offered = jnp.asarray(float(n), jnp.float32)
     # Reduce telemetry over every mesh axis so replicated out_specs hold.
     for ax in axis_names:
         load = jax.lax.psum(load, ax)
         balance = jax.lax.pmean(balance, ax)
         z = jax.lax.pmean(z, ax)
-        drop = jax.lax.pmean(drop, ax)
+        kept = jax.lax.psum(kept, ax)
+        offered = jax.lax.psum(offered, ax)
+    drop = 1.0 - kept / offered
     return out, load, balance, z, drop
 
 
-def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm=None):
+def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm):
     """``expert_perm`` is THIS layer's ``[E_virtual]`` expert->slot map (one
-    row of the trainer's per-layer perm stack); None means identity."""
+    row of the trainer's per-layer perm stack)."""
     e = cfg.moe
     ev, _ = virtual_experts(e.num_experts, plan.model_size)
-    perm_arr = (
-        jnp.asarray(expert_perm, jnp.int32)
-        if expert_perm is not None
-        else jnp.arange(ev, dtype=jnp.int32)
-    )
-    if perm_arr.shape != (ev,):
-        raise ValueError(
-            f"expert_perm must be this layer's [E_virtual]={ev} row, "
-            f"got shape {perm_arr.shape}"
-        )
 
     def body(router, w_in, w_gate, w_out, xl, perm, axis_names=()):
         return _moe_mixnet_local(
@@ -317,7 +309,7 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm=None):
     if mesh is None or plan.model_size <= 1:
         out, load, balance, z, drop = body(
             params["router"], params["w_in"], params["w_gate"], params["w_out"],
-            x, perm_arr,
+            x, expert_perm,
         )
     else:
         ex_ax = plan.dim_axis(ev)
@@ -356,7 +348,7 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm=None):
         )
         out, load, balance, z, drop = fn(
             params["router"], params["w_in"], params["w_gate"], params["w_out"],
-            x, perm_arr,
+            x, expert_perm,
         )
     return out, MoEStats(load, balance, z, drop)
 
@@ -366,7 +358,7 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm=None):
 # ---------------------------------------------------------------------------
 
 
-def _moe_dense_decode(params, x, cfg, plan: ShardingPlan, mesh=None):
+def _moe_dense_decode(params, x, cfg, plan: ShardingPlan, mesh=None, expert_perm=None):
     """Decode-time MoE: compute ALL experts densely on the handful of live
     tokens and combine with the (sparse) gate weights.
 
@@ -376,31 +368,39 @@ def _moe_dense_decode(params, x, cfg, plan: ShardingPlan, mesh=None):
     over the FSDP axis every layer (~27 GB/step for deepseek-v2).  Dense
     decode keeps weights stationary: activations ride the contractions
     (psums of a few MB).  §Perf beyond-paper optimization.
+
+    The gate map comes from the routing core's virtual-slot destinations, so
+    the layer's ``expert_perm`` re-addressing applies here exactly as it
+    does on the sparse paths (decode after a runtime reconfiguration hits
+    physically permuted expert weights).
     """
     e = cfg.moe
     b, s, d = x.shape
     ev, r = virtual_experts(e.num_experts, plan.model_size)
     xt = x.reshape(b * s, d)
     logits = xt.astype(jnp.float32) @ params["router"]
-    weights, idx = ops.topk_gating(logits, e.top_k)
-    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
-    # Scatter the kept top-k weights into a dense [T, E] map, then expand to
-    # virtual experts (each of the r shards contributes a partial product).
-    wmap = jnp.zeros((b * s, e.num_experts), jnp.float32)
-    wmap = wmap.at[jnp.arange(b * s)[:, None], idx].add(weights)
-    wv = jnp.repeat(wmap, r, axis=1)  # [T, Ev]
+    info = routing.compute_routing(
+        logits, top_k=e.top_k, num_virtual=ev, replication=r,
+        expert_perm=expert_perm,
+    )
+    # Scatter the kept top-k weights into a dense [T, Ev] map over PHYSICAL
+    # virtual slots (each of the r shards contributes a partial product).
+    wv = (
+        jnp.zeros((b * s, ev), jnp.float32)
+        .at[jnp.arange(b * s)[:, None], info.vdest]
+        .add(info.wfull)
+    )
 
     ex_ax = plan.dim_axis(ev)
     h = jnp.einsum("td,edf->tef", xt, params["w_in"])
     g = jnp.einsum("td,edf->tef", xt, params["w_gate"])
-    actfn = jax.nn.silu if cfg.act in ("silu", "swiglu") else jax.nn.gelu
-    h = actfn(g) * h
+    h = _actfn(cfg.act)(g) * h
     h = constrain(h, mesh, P(None, ex_ax, None))
     y = jnp.einsum("tef,efd->ted", h, params["w_out"])
     out = jnp.einsum("te,ted->td", wv.astype(y.dtype), y).reshape(b, s, d)
 
-    balance, z = router_losses(logits, idx, e.num_experts)
-    load = jax.nn.one_hot(idx.reshape(-1), e.num_experts, dtype=jnp.float32).sum(0)
+    balance, z = router_losses(logits, info.idx, e.num_experts)
+    load = routing.expert_load(info.idx, e.num_experts)
     return out, MoEStats(load, balance, z, jnp.zeros((), jnp.float32))
 
 
@@ -418,18 +418,21 @@ def moe_apply(
     mesh=None,
     expert_perm=None,
     backend: str | None = None,
+    mode: str | None = None,
 ):
     e = cfg.moe
     backend = backend or e.backend
-    if x.shape[1] == 1 and backend != "einsum":
+    if backend != "einsum" and (x.shape[1] == 1 or mode == "decode"):
         # Single-token decode: weight-stationary dense path (see docstring).
         backend = "dense_decode"
+    ev, _ = virtual_experts(e.num_experts, plan.model_size)
+    perm = routing.resolve_perm(expert_perm, ev)
     if backend == "dense_decode":
-        out, stats = _moe_dense_decode(params, x, cfg, plan, mesh=mesh)
+        out, stats = _moe_dense_decode(params, x, cfg, plan, mesh=mesh, expert_perm=perm)
     elif backend == "mixnet":
-        out, stats = _moe_mixnet(params, x, cfg, plan, mesh, expert_perm)
+        out, stats = _moe_mixnet(params, x, cfg, plan, mesh, perm)
     elif backend == "einsum":
-        out, stats = _moe_einsum(params, x, cfg, plan, mesh=mesh)
+        out, stats = _moe_einsum(params, x, cfg, plan, mesh=mesh, expert_perm=perm)
     else:
         raise ValueError(f"unknown MoE backend {backend!r}")
     if "shared" in params:

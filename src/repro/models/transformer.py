@@ -229,7 +229,8 @@ def _apply_block(
         h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
         if cfg.is_moe:
             y, stats = moe_mod.moe_apply(
-                p["moe"], h2, cfg, plan, mesh=mesh, expert_perm=expert_perm
+                p["moe"], h2, cfg, plan, mesh=mesh, expert_perm=expert_perm,
+                mode=mode,
             )
         elif cfg.sp_shardmap and L.can_use_sp_mlp(p["mlp"], h2, cfg, plan, mesh, mode):
             y = L.mlp_apply_sp(p["mlp"], h2, cfg, plan, mesh)

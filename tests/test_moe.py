@@ -16,11 +16,12 @@ KEY = jax.random.PRNGKey(0)
 PLAN = make_plan(None)
 
 
-def make_cfg(num_experts=4, top_k=2, cf=4.0, shared=0):
+def make_cfg(num_experts=4, top_k=2, cf=4.0, shared=0, dispatch="dropless"):
     return ModelConfig(
         "t", "moe", 2, 32, 4, 2, 64, 128, dtype="float32",
         moe=MoEConfig(num_experts=num_experts, top_k=top_k, d_ff=48,
-                      capacity_factor=cf, num_shared_experts=shared, a2a_group=2),
+                      capacity_factor=cf, num_shared_experts=shared, a2a_group=2,
+                      dispatch=dispatch),
     )
 
 
@@ -48,11 +49,22 @@ def test_shared_experts_added():
 
 
 def test_capacity_drops_tokens():
-    cfg = make_cfg(cf=0.25)  # deliberately tight capacity
+    cfg = make_cfg(cf=0.25, dispatch="capacity")  # deliberately tight capacity
     params, _ = moe_mod.init_moe(KEY, cfg, PLAN)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
     _, stats = moe_mod.moe_apply(params, x, cfg, PLAN, backend="einsum")
     assert float(stats.dropped_fraction) > 0.0
+
+
+def test_dropless_never_drops():
+    """Default dispatch is dropless: even an absurd capacity factor drops
+    nothing on any backend."""
+    cfg = make_cfg(cf=0.01)
+    params, _ = moe_mod.init_moe(KEY, cfg, PLAN)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+    for backend in ("einsum", "mixnet"):
+        _, stats = moe_mod.moe_apply(params, x, cfg, PLAN, backend=backend)
+        assert float(stats.dropped_fraction) == 0.0, backend
 
 
 @given(seed=st.integers(0, 50))

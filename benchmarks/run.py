@@ -21,6 +21,7 @@ claims, next to the paper's value:
   fig28_reconfig_latency   reconfiguration latency sweep (Fig 28)
   copilot_refit            batched vs looped COPILOT refit (BENCH_copilot.json)
   moe_dispatch             sort-based vs one-hot dispatch (BENCH_moe_dispatch.json)
+  collectives              flat vs hierarchical vs fused a2a (BENCH_collectives.json)
   kernels                  Pallas-kernel oracle timings (framework table)
 """
 
@@ -505,6 +506,107 @@ def moe_dispatch(fast=False):
         json.dump(history, f, indent=2)
 
 
+_COLLECTIVES_BENCH = """
+import json, time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core.commruntime import AllToAll, CommSpec
+from repro.launch.mesh import make_mesh
+from repro.parallel.sharding import shard_map
+
+PDEV, C, D, REPS = 8, %(C)d, %(D)d, 10
+mesh = make_mesh((PDEV,), ("model",))
+x = jax.random.normal(jax.random.PRNGKey(0), (PDEV * PDEV, C, D), jnp.float32)
+e = jax.random.randint(jax.random.PRNGKey(1), (PDEV * PDEV, C), 0, 7).astype(jnp.int32)
+
+
+def timeit(fn):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / REPS * 1e6
+
+
+def pair(group):
+    op = AllToAll(CommSpec(axis="model", axis_size=PDEV, group_size=group))
+    f = shard_map(lambda v, m: (op(v), op(m[..., None])[..., 0]), mesh=mesh,
+                  in_specs=(P("model"), P("model")),
+                  out_specs=(P("model"), P("model")), check_vma=False)
+    return jax.jit(f)
+
+
+def fused(group):
+    op = AllToAll(CommSpec(axis="model", axis_size=PDEV, group_size=group))
+    f = shard_map(lambda v, m: op.fused(v, m), mesh=mesh,
+                  in_specs=(P("model"), P("model")),
+                  out_specs=(P("model"), P("model")), check_vma=False)
+    return jax.jit(f)
+
+
+flat_us = timeit(lambda f=pair(1): f(x, e))
+hier_us = timeit(lambda f=pair(4): f(x, e))
+fused_us = timeit(lambda f=fused(4): f(x, e))
+fx, fe = fused(4)(x, e)
+ux, ue = pair(4)(x, e)
+exact = bool((fx == ux).all()) and bool((fe == ue).all())
+print("BENCH " + json.dumps({
+    "bench": "collectives",
+    "devices": PDEV, "chunk": C, "d_model": D,
+    "flat_pair_us": round(flat_us, 1),
+    "hier_pair_us": round(hier_us, 1),
+    "hier_fused_us": round(fused_us, 1),
+    "fused_speedup_over_pair": round(hier_us / max(fused_us, 1e-9), 3),
+    "fused_bit_identical": exact,
+}))
+"""
+
+
+def collectives(fast=False):
+    """CommRuntime a2a lowerings on 8 forced host devices (subprocess, like
+    the multidevice tests): flat vs hierarchical delegation, and the fused
+    payload+metadata transfer vs the unfused pair.  Appends the wall-clock
+    numbers and the bit-identity check to BENCH_collectives.json."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    script = _COLLECTIVES_BENCH % {"C": 64 if fast else 256, "D": 128}
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=900, env=env,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"collectives bench subprocess failed:\n{proc.stderr[-2000:]}")
+    entry = json.loads(
+        [l for l in proc.stdout.splitlines() if l.startswith("BENCH ")][-1][6:]
+    )
+    assert entry["fused_bit_identical"], "fused a2a diverged from unfused pair"
+    _row(
+        "collectives/a2a_8dev", entry["hier_fused_us"],
+        f"flat_pair_ms={entry['flat_pair_us']/1e3:.2f} "
+        f"hier_pair_ms={entry['hier_pair_us']/1e3:.2f} "
+        f"hier_fused_ms={entry['hier_fused_us']/1e3:.2f} "
+        f"fused_speedup={entry['fused_speedup_over_pair']:.2f}x "
+        f"(fused must stay bit-identical)",
+    )
+    path = os.path.join(root, "BENCH_collectives.json")
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
 def kernels(fast=False):
     """Framework table: Pallas kernels validated against oracles (interpret)
     + oracle-path timings on CPU."""
@@ -591,6 +693,7 @@ ALL = {
     "fig28_reconfig_latency": fig28_reconfig_latency,
     "copilot_refit": copilot_refit,
     "moe_dispatch": moe_dispatch,
+    "collectives": collectives,
     "kernels": kernels,
     "beyond_placement": beyond_placement,
     "beyond_a2a_hierarchy": beyond_a2a_hierarchy,

@@ -4,8 +4,11 @@
   2. feed them through the unified control-plane engine's lifecycle
      (observe -> end_step -> plan -> apply, DESIGN.md §3),
   3. COPILOT predicts the next layer's demand ahead of its gate (§B.1),
-  4. run Algorithm 1 to allocate optical circuits (§5.2),
-  5. compare completion time vs a demand-oblivious uniform topology,
+  4. run Algorithm 1 to allocate optical circuits (§5.2) via the fabric,
+  5. price the SAME a2a through the CommRuntime AllToAll op (the object the
+     trainer executes and netsim consumes, DESIGN.md §7) before/after the
+     reconfiguration, including a wire re-addressing via the op's
+     reconfigure hook,
   6. show the TPU analogue: per-layer expert re-placement relieving each
      layer's own bottleneck.
 
@@ -19,9 +22,10 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs.paper_models import MIXTRAL_8X7B
-from repro.core import topology as topo
+from repro.core.commruntime import AllToAll, CommSpec
 from repro.core.controlplane import ControlPlane
 from repro.core.copilot import CopilotPredictor, topk_accuracy
+from repro.core.fabric import FabricConfig, MixNetFabric
 from repro.core.netsim import GateTraceGenerator
 
 
@@ -47,18 +51,26 @@ def main():
     print(f"COPILOT top-4 accuracy on the next layer: {acc:.2f} "
           f"(unchanged baseline: {unchanged:.2f})")
 
-    print("\n== 4-5: Algorithm 1 circuit allocation ==")
+    print("\n== 4-5: Algorithm 1 circuit allocation, priced by the runtime ==")
     demand = trace.device_demand(loads[1], MIXTRAL_8X7B, servers)
-    solved = topo.reconfigure_ocs(demand, alpha=6, num_servers=servers,
-                                  experts_per_server=1)
-    pair = np.triu(np.maximum(demand, demand.T), 1)
-    t_solved = topo.topology_completion_time(solved.circuits, pair, 12.5e9, 0.25 * 12.5e9)
-    t_uniform = topo.topology_completion_time(
-        topo.uniform_topology(servers, 6), pair, 12.5e9, 0.25 * 12.5e9)
-    print(f"circuits:\n{solved.circuits}")
-    print(f"a2a completion: reconfigured={t_solved*1e3:.2f} ms  "
-          f"uniform={t_uniform*1e3:.2f} ms  "
+    fab = MixNetFabric(FabricConfig(num_servers=servers, link_gbps=100))
+    a2a = AllToAll(CommSpec.from_fabric(fab, servers))
+    t_uniform = a2a.cost(fab, demand)  # demand-oblivious uniform circuits
+    fab.prepare(demand)                # Algorithm 1 pushes the cross-map
+    t_solved = a2a.cost(fab, demand)
+    link = a2a.bytes_on_link(float(demand.sum()) / servers)
+    print(f"circuits:\n{fab._circuits}")
+    print(f"a2a completion ({a2a.__class__.__name__} op): "
+          f"reconfigured={t_solved*1e3:.2f} ms  uniform={t_uniform*1e3:.2f} ms  "
           f"speedup={t_uniform/max(t_solved,1e-12):.2f}x")
+    print(f"bytes-on-link per server: scale_up={link.scale_up/1e6:.1f} MB  "
+          f"scale_out={link.scale_out/1e6:.1f} MB")
+    # The reconfigure hook: a control-plane plan that re-addresses wire
+    # chunks (here: rotate every destination one server) changes the PHYSICAL
+    # demand the same op prices — no caller rewiring.
+    rotated = a2a.reconfigure(dest_perm=np.roll(np.arange(servers), 1))
+    print(f"after a wire re-address (rotate-by-1 dest_perm): "
+          f"{rotated.cost(fab, demand)*1e3:.2f} ms on the same circuits")
 
     print("\n== 6: TPU analogue — per-layer expert re-placement ==")
     rng = np.random.default_rng(0)

@@ -6,7 +6,9 @@ Control plane: :mod:`repro.core.traffic` (demand characterization),
 :mod:`repro.core.controlplane` (the unified observe/plan/apply engine +
 failure handling, shared by the trainer and the simulator).
 
-Data plane: :mod:`repro.core.collectives` (hierarchical a2a / all-reduce).
+Data plane: :mod:`repro.core.commruntime` (the shared CommSpec/CollectiveOp
+runtime — hierarchical a2a, all-reduce, all-gather, with the byte/cost model
+the simulator prices; :mod:`repro.core.collectives` is a deprecated shim).
 
 Evaluation plane: :mod:`repro.core.fabric`, :mod:`repro.core.netsim`,
 :mod:`repro.core.cost` (the paper's §7 simulations).
@@ -14,6 +16,7 @@ Evaluation plane: :mod:`repro.core.fabric`, :mod:`repro.core.netsim`,
 
 from repro.core import (
     collectives,
+    commruntime,
     controlplane,
     copilot,
     cost,
@@ -26,6 +29,6 @@ from repro.core import (
 )
 
 __all__ = [
-    "collectives", "controlplane", "copilot", "cost", "fabric", "netsim",
-    "placement", "reconfig", "topology", "traffic",
+    "collectives", "commruntime", "controlplane", "copilot", "cost", "fabric",
+    "netsim", "placement", "reconfig", "topology", "traffic",
 ]

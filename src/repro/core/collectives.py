@@ -1,28 +1,24 @@
-"""MixNet data plane: topology-aware collectives (paper §5.3) as
-``shard_map`` primitives.
+"""DEPRECATED shim — the MixNet data plane moved to
+:mod:`repro.core.commruntime` (DESIGN.md §7).
 
-The paper routes EP all-to-all through a delegation hierarchy: intra-host
-gather over NVSwitch -> inter-host transfer on the OCS circuits -> intra-host
-all-to-all -> scatter, with the two inner steps overlapped.  On a TPU mesh
-the same structure is a *two-stage factored all-to-all* over the ``model``
-axis: the axis of size P is treated as a (G groups x H per-group) grid; stage
-1 exchanges within a group (the scale-up analogue), stage 2 across groups
-(the scale-out analogue).  The composition is bit-identical to the flat
-``lax.all_to_all`` (tested), but each stage's transfer only crosses one
-hierarchy level — which is what lets the compiler schedule them on different
-link classes and overlap them.
-
-DP gradients use the paper's hierarchical all-reduce: reduce-scatter inside
-the region, all-reduce across regions on the gateway shard, all-gather back.
+The topology-aware collectives now live behind the shared CommRuntime API:
+build a :class:`repro.core.commruntime.CommSpec` and one of the
+:class:`CollectiveOp` objects (``AllToAll``, ``AllReduce``, ``AllGather``,
+``ReduceScatter``, ``Permute``), which carry the executable lowering, the
+per-link-class byte accounting the simulator prices, and the control-plane
+reconfiguration hook.  The free functions below are re-exported unchanged so
+existing callers keep working; new code should not import this module.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-from jax import lax
+from repro.core.commruntime import (
+    flat_all_to_all,
+    hierarchical_all_to_all,
+    hierarchical_psum,
+    mixnet_all_to_all,
+    ring_all_gather,
+)
 
 __all__ = [
     "hierarchical_all_to_all",
@@ -31,125 +27,3 @@ __all__ = [
     "mixnet_all_to_all",
     "ring_all_gather",
 ]
-
-
-def _axis_size(axis_name: str) -> int:
-    """Static mesh-axis size; ``lax.psum(1, axis)`` constant-folds on jax
-    releases predating ``lax.axis_size``."""
-    if hasattr(lax, "axis_size"):
-        return lax.axis_size(axis_name)
-    return lax.psum(1, axis_name)
-
-
-def _grid_groups(p: int, group_size: int) -> tuple[list[list[int]], list[list[int]]]:
-    if p % group_size != 0:
-        raise ValueError(f"axis size {p} not divisible by group size {group_size}")
-    g = p // group_size
-    intra = [[gg * group_size + h for h in range(group_size)] for gg in range(g)]
-    inter = [[gg * group_size + h for gg in range(g)] for h in range(group_size)]
-    return intra, inter
-
-
-def flat_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
-    """Baseline single-shot all-to-all. ``x``: [P, ...] chunks by destination."""
-    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
-
-
-def hierarchical_all_to_all(
-    x: jax.Array, axis_name: str, group_size: int
-) -> jax.Array:
-    """Two-stage (delegation) all-to-all over a factored axis.
-
-    Args:
-      x: ``[P, ...]`` local chunks ordered by destination device on
-        ``axis_name`` (device index = g * group_size + h).
-      axis_name: mesh axis of size P = G * group_size.
-      group_size: size of the scale-up (intra-host analogue) stage H.
-
-    Returns:
-      ``[P, ...]`` chunks ordered by source device — identical to
-      :func:`flat_all_to_all`.
-    """
-    p = _axis_size(axis_name)
-    h = group_size
-    if p == 1 or h == 1 or h >= p:
-        return flat_all_to_all(x, axis_name)
-    g = p // h
-    intra, inter = _grid_groups(p, h)
-    xr = x.reshape(g, h, *x.shape[1:])
-    # Stage 1 — intra-group exchange (scale-up): split/concat the h-chunk dim.
-    z = lax.all_to_all(xr, axis_name, split_axis=1, concat_axis=1, axis_index_groups=intra)
-    # Stage 2 — inter-group exchange (scale-out): split/concat the g-chunk dim.
-    w = lax.all_to_all(z, axis_name, split_axis=0, concat_axis=0, axis_index_groups=inter)
-    return w.reshape(x.shape)
-
-
-def mixnet_all_to_all(
-    x: jax.Array,
-    axis_name: str,
-    group_size: int,
-    *,
-    dest_perm: jax.Array | None = None,
-    src_perm: jax.Array | None = None,
-) -> jax.Array:
-    """Hierarchical all-to-all with an expert-placement permutation.
-
-    ``dest_perm`` re-addresses outgoing chunks (chunk for logical destination
-    ``d`` is physically sent to ``dest_perm[d]``); ``src_perm`` restores the
-    logical ordering of received chunks.  This is how the runtime-reconfigured
-    placement from :mod:`repro.core.placement` is realized on the wire without
-    touching the collective itself — the analogue of pushing a new cross-map
-    to the OCS.
-    """
-    if dest_perm is not None:
-        x = x[dest_perm]
-    y = hierarchical_all_to_all(x, axis_name, group_size)
-    if src_perm is not None:
-        y = y[src_perm]
-    return y
-
-
-def hierarchical_psum(
-    x: jax.Array,
-    inner_axis: str,
-    outer_axis: str | None = None,
-    *,
-    scatter_dim: int = 0,
-) -> jax.Array:
-    """Paper §5.3 hierarchical all-reduce.
-
-    reduce-scatter over ``inner_axis`` (intra-host reduction to the gateway
-    shard) -> all-reduce over ``outer_axis`` (the global ring over EPS) ->
-    all-gather over ``inner_axis`` (broadcast back).  Cross-region bytes drop
-    by a factor of the inner axis size versus a flat all-reduce.
-    """
-    inner = _axis_size(inner_axis)
-    if inner == 1 or x.shape[scatter_dim] % inner != 0:
-        y = lax.psum(x, inner_axis)
-        return lax.psum(y, outer_axis) if outer_axis else y
-    part = lax.psum_scatter(x, inner_axis, scatter_dimension=scatter_dim, tiled=True)
-    if outer_axis is not None:
-        part = lax.psum(part, outer_axis)
-    return lax.all_gather(part, inner_axis, axis=scatter_dim, tiled=True)
-
-
-def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
-    """Explicit ring all-gather via collective_permute (comm/compute overlap
-    building block for the perf path; semantically = lax.all_gather(tiled))."""
-    p = _axis_size(axis_name)
-    if p == 1:
-        return x
-    idx = lax.axis_index(axis_name)
-    perm = [(i, (i + 1) % p) for i in range(p)]
-
-    def body(carry, _):
-        block, rot = carry
-        nxt = lax.ppermute(block, axis_name, perm)
-        return (nxt, rot - 1), nxt
-
-    (_, _), rest = lax.scan(body, (x, p - 1), None, length=p - 1)
-    # rest[k] came from device (idx - 1 - k); roll into ascending device order.
-    all_blocks = jnp.concatenate([x[None], rest], axis=0)  # [P, ...] by hop
-    src = (idx - jnp.arange(p)) % p
-    order = jnp.argsort(src)
-    return all_blocks[order].reshape(p * x.shape[0], *x.shape[1:])

@@ -18,6 +18,12 @@ Reconfiguration is driven exclusively through the shared
 trainer uses): the simulator observes loads into its monitor, asks it for
 per-layer plans (COPILOT-predicted for the FP's first all-to-all), and
 applies them against the fabric with hide-or-block accounting.
+
+Communication phases are priced through the SAME CommRuntime ops the trainer
+executes (:mod:`repro.core.commruntime`, DESIGN.md §7): an ``AllToAll`` /
+``AllReduce`` built from a fabric-derived :class:`CommSpec` owns both the
+byte accounting (``ep_alltoall_bytes``, ``dp_gradient_bytes``) and the
+phase-latency costing — this module keeps no private collective formulas.
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import commruntime as comm
 from repro.core.controlplane import ControlPlane
 from repro.core.fabric import Fabric
 
@@ -105,19 +112,23 @@ class SimModel:
         return self.attention_time() / self.layers_per_stage
 
     # ---- communication sizes -------------------------------------------------
+    # Byte formulas live in the CommRuntime (the same accounting the trainer's
+    # ops carry); these wrappers only feed it this model's shapes.
     def a2a_bytes_total(self) -> float:
         """Bytes moved by ONE all-to-all phase of one layer (whole EP group)."""
-        return self.tokens_per_microbatch * self.top_k * self.d_model * self.dtype_bytes
+        return comm.ep_alltoall_bytes(
+            self.tokens_per_microbatch, self.top_k, self.d_model, self.dtype_bytes
+        )
 
     def dp_gradient_bytes_per_server(self, gpus_per_server: int = 8) -> float:
-        """Gradient bytes a server contributes to the DP ring.
-
-        Each GPU holds params / (gpus per model replica); a server aggregates
-        its 8 GPUs' shards through the gateway (hierarchical all-reduce §5.3).
-        """
-        gpus_per_replica = max(self.gpus_per_stage * self.pp_degree, 1)
-        per_gpu = self.param_count() / gpus_per_replica
-        return per_gpu * gpus_per_server * self.dtype_bytes
+        """Gradient bytes a server contributes to the DP ring (hierarchical
+        all-reduce §5.3 — the server gateway aggregates its GPUs' shards)."""
+        return comm.dp_gradient_bytes(
+            self.param_count(),
+            max(self.gpus_per_stage * self.pp_degree, 1),
+            gpus_per_server,
+            self.dtype_bytes,
+        )
 
 
 class GateTraceGenerator:
@@ -240,6 +251,7 @@ def _stage_times(
     trace: GateTraceGenerator,
     num_servers_region: int,
     cp: ControlPlane,
+    a2a_op: comm.AllToAll,
 ) -> tuple[float, float, float]:
     """One PP stage's communication over a FULL iteration (all microbatches).
 
@@ -278,15 +290,15 @@ def _stage_times(
                 pred_demand = trace.device_demand(pred, model, num_servers_region)
                 blocked += cp.apply(cp.plan(li, pred_demand, predicted=True))
             # else: reuse previous topology — no plan at all.
-        a2a_total += m * fabric.alltoall_time(demand)
+        a2a_total += m * a2a_op.cost(fabric, demand)
         # --- FP a2a #2 (combine, transposed matrix): reconfig hidden when the
         # compute window allows; otherwise the overflow blocks the pipe.
         blocked += cp.apply(cp.plan(li, demand.T), hide_window=hide_window)
-        a2a_total += m * fabric.alltoall_time(demand.T)
+        a2a_total += m * a2a_op.cost(fabric, demand.T)
         # --- BP reconfig + a2a pair (same matrices, §5.1; window = bwd compute).
         blocked += cp.apply(cp.plan(li, demand), hide_window=2.0 * hide_window)
-        a2a_total += m * fabric.alltoall_time(demand)
-        a2a_total += m * fabric.alltoall_time(demand.T)
+        a2a_total += m * a2a_op.cost(fabric, demand)
+        a2a_total += m * a2a_op.cost(fabric, demand.T)
         cp.observe(li, load * model.tokens_per_microbatch * model.top_k)
     fwd_compute = (attn_f + exp_f) * model.layers_per_stage
     bwd_compute = 2.0 * fwd_compute
@@ -315,8 +327,18 @@ def simulate_iteration(
         )
     loads = trace.step()
 
+    # The comm phases are priced through the SAME CollectiveOp API the
+    # trainer executes; the spec's region/group factorization comes from the
+    # fabric topology (servers x intra-server scale-up domain).
+    a2a_op = comm.AllToAll(comm.CommSpec.from_fabric(fabric, num_servers_region))
+    dp_op = comm.AllReduce(comm.CommSpec(
+        axis=None,
+        axis_size=max(gpus_per_server, 1),
+        group_size=max(gpus_per_server, 1),
+        outer_size=max(fabric.cfg.num_servers, 1),
+    ))
     compute, a2a, blocked = _stage_times(
-        model, fabric, loads, trace, num_servers_region, controlplane
+        model, fabric, loads, trace, num_servers_region, controlplane, a2a_op
     )
     # 1F1B: the critical path stretches the per-stage work by (M+P-1)/M.
     m, p = model.num_microbatches, model.pp_degree
@@ -325,7 +347,7 @@ def simulate_iteration(
     bubble = (stretch - 1.0) * (compute + a2a)
     # DP gradient all-reduce (hierarchical on MixNet), half overlapped with bwd.
     dp_bytes = model.dp_gradient_bytes_per_server(gpus_per_server)
-    dp = 0.5 * fabric.allreduce_time(dp_bytes)
+    dp = 0.5 * dp_op.cost(fabric, dp_bytes)
     total = pipeline + blocked + dp
     return IterationResult(
         total=total,

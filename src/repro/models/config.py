@@ -31,6 +31,10 @@ class MoEConfig:
     backend: str = "einsum"
     # Hierarchical a2a group size (scale-up stage width) for the mixnet path.
     a2a_group: int = 4
+    # Fuse the payload + gate-metadata transfers of the mixnet dispatch into
+    # ONE packed a2a (bit-identical payload; halves the phase count).  Off
+    # only for the unfused-parity regression baseline.
+    a2a_fuse: bool = True
     # Token-dispatch semantics (repro.models.routing): "dropless" routes every
     # token (MegaBlocks-style sort-based layout, static shapes; capacity_factor
     # ignored) or "capacity" drops overflow beyond the capacity_factor buffers.

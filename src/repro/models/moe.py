@@ -13,7 +13,9 @@ sort-based dropless engine, DESIGN.md §6); this module owns the three
 ``mixnet``  — the paper's data plane (§5.3) as an explicit ``shard_map``
   program over the ``model`` axis: tokens are gathered into per-destination
   send buffers (``ops.moe_dispatch``), exchanged with the **hierarchical
-  delegation all-to-all** (:func:`repro.core.collectives.mixnet_all_to_all`),
+  delegation all-to-all** — the CommRuntime :class:`AllToAll` op built from
+  a :class:`repro.core.commruntime.CommSpec` (DESIGN.md §7), with the
+  payload and its gate metadata fused into ONE packed wire transfer —
   packed by local expert and computed with the grouped Pallas GEMM
   (``ops.grouped_matmul`` — capacity buffers or the dropless block layout),
   and returned the same way (``ops.moe_combine``).  EP traffic never leaves
@@ -56,7 +58,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import mixnet_all_to_all
+from repro.core.commruntime import AllToAll, CommSpec
 from repro.kernels import ops
 from repro.models import routing
 from repro.models.routing import MoEStats, router_losses
@@ -237,11 +239,16 @@ def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, ax
     ).reshape(p_axis, cp).astype(jnp.int32)
 
     # --- hierarchical delegation all-to-all (the MixNet fabric) ------------
-    if p_axis > 1:
-        recv_x = mixnet_all_to_all(send_x, "model", e.a2a_group)
-        recv_e = mixnet_all_to_all(send_e[..., None], "model", e.a2a_group)[..., 0]
+    # One CommRuntime op serves the whole layer: the dispatch trip moves the
+    # token payload and its expert-id metadata as ONE packed wire transfer
+    # (bit-identical payload to the unfused pair, tested), the return trip
+    # reuses the same lowering.  P = 1 degrades to identity inside the op.
+    a2a = AllToAll(CommSpec.from_plan(plan, group_size=e.a2a_group))
+    if e.a2a_fuse:
+        recv_x, recv_e = a2a.fused(send_x, send_e)
     else:
-        recv_x, recv_e = send_x, send_e
+        recv_x = a2a(send_x)
+        recv_e = a2a(send_e[..., None])[..., 0]
 
     # --- stage 2: pack by local expert, grouped Pallas GEMM, unpack ---------
     rx = recv_x.reshape(p_axis * cp, d)
@@ -269,7 +276,7 @@ def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, ax
     back = back.reshape(p_axis, cp, d)
 
     # --- return trip + weighted combine -------------------------------------
-    ret = mixnet_all_to_all(back, "model", e.a2a_group) if p_axis > 1 else back
+    ret = a2a(back)
     out = ops.moe_combine(
         ret.reshape(p_axis * cp, d), plan1.slot.reshape(tl, sc), info.wfull
     )

@@ -4,10 +4,22 @@ These are the functions the launcher pjits and the dry-run lowers: pure
 (params, opt_state, batch) -> (params, opt_state, metrics) with all
 distribution expressed through param/activation shardings (plus the MoE
 ``mixnet`` shard_map region inside the model).
+
+Gradient reduction has two modes (``dp_comm``): ``"auto"`` leaves the DP
+reduction to XLA's sharding propagation (the pjit baseline), while
+``"runtime"`` computes per-shard gradients inside an explicit ``shard_map``
+over the batch axes and reduces them through the CommRuntime's hierarchical
+:class:`~repro.core.commruntime.AllReduce` (reduce-scatter inside the
+region, ring across regions, all-gather back — paper §5.3).  The runtime
+mode requires a DP-only mesh (no model axis) with FSDP disabled
+(``make_plan(mesh, fsdp=False)`` — params ride the shard_map replicated)
+and evaluates the MoE aux losses per shard (averaged), the standard
+per-group GShard semantics.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -15,9 +27,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.commruntime import AllReduce, CommSpec
 from repro.models import transformer as tfm
 from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
-from repro.parallel.sharding import ShardingPlan, constrain
+from repro.parallel.sharding import ShardingPlan, constrain, shard_map
 
 __all__ = [
     "make_train_step",
@@ -44,15 +57,87 @@ def loss_fn(params, batch, cfg, plan, mesh=None, expert_perm=None):
     return loss, (ce, aux)
 
 
+def _make_runtime_grad_fn(cfg, plan: ShardingPlan, mesh):
+    """Per-shard gradients inside shard_map over the batch axes, reduced with
+    the CommRuntime hierarchical AllReduce (``dp_comm="runtime"``)."""
+    if mesh is None or not plan.batch_axes or plan.model_size > 1:
+        raise ValueError(
+            "dp_comm='runtime' requires a data-parallel mesh without a model "
+            f"axis (got mesh={mesh is not None}, plan={plan})"
+        )
+    if plan.fsdp_axis is not None:
+        # Params enter the shard_map replicated (in_specs P()) and the full
+        # gradient tree leaves it replicated — ZeRO-3 sharding would be
+        # silently gathered away.  Fail loudly instead of OOMing at scale.
+        raise ValueError(
+            "dp_comm='runtime' replicates parameters inside the shard_map and "
+            "is incompatible with FSDP sharding; build the plan with "
+            "make_plan(mesh, fsdp=False)"
+        )
+    local_plan = ShardingPlan((), None, 1, None, 1)
+    reduce_op = AllReduce(CommSpec.for_grad_reduce(plan, mesh))
+    tok_spec = P(plan.batch_axes, None)
+    out_specs = (P(), P(), P(), P())
+
+    def body(params, tokens, labels, expert_perm):
+        (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, {"tokens": tokens, "labels": labels}, cfg, local_plan,
+            None, expert_perm,
+        )
+        grads = jax.tree.map(lambda g: reduce_op(g, mean=True), grads)
+        stats = aux.moe_stats
+        aux = dataclasses.replace(
+            aux,
+            # Expert-load telemetry is a count -> SUM over shards; the aux
+            # losses are per-shard means -> averaged.
+            moe_stats=None if stats is None else reduce_op(stats),
+            balance_loss=reduce_op(aux.balance_loss, mean=True),
+            z_loss=reduce_op(aux.z_loss, mean=True),
+        )
+        return reduce_op(loss, mean=True), reduce_op(ce, mean=True), aux, grads
+
+    def grad_fn(params, batch, expert_perm):
+        if expert_perm is None:
+            f = shard_map(
+                lambda p, t, l: body(p, t, l, None), mesh=mesh,
+                in_specs=(P(), tok_spec, tok_spec), out_specs=out_specs,
+                check_vma=False,
+            )
+            return f(params, batch["tokens"], batch["labels"])
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), tok_spec, tok_spec, P()), out_specs=out_specs,
+            check_vma=False,
+        )
+        return f(params, batch["tokens"], batch["labels"], expert_perm)
+
+    return grad_fn
+
+
 def make_train_step(
-    cfg, plan: ShardingPlan, opt_cfg: AdamWConfig, mesh=None, microbatches: int = 1
+    cfg,
+    plan: ShardingPlan,
+    opt_cfg: AdamWConfig,
+    mesh=None,
+    microbatches: int = 1,
+    dp_comm: str = "auto",
 ):
     """jit-able train step; ``microbatches > 1`` scans gradient accumulation
     over batch slices — activation live-set (and its reshard collectives per
     slice) shrink by the microbatch factor at the cost of re-gathering FSDP
-    weights per slice (the classic trade; see EXPERIMENTS.md §Perf)."""
+    weights per slice (the classic trade; see EXPERIMENTS.md §Perf).
+
+    ``dp_comm="runtime"`` routes the DP gradient reduction through the
+    CommRuntime's hierarchical all-reduce (see module docstring)."""
+    if dp_comm not in ("auto", "runtime"):
+        raise ValueError(f"unknown dp_comm mode {dp_comm!r}")
+    runtime_grads = (
+        _make_runtime_grad_fn(cfg, plan, mesh) if dp_comm == "runtime" else None
+    )
 
     def grad_once(params, batch, expert_perm):
+        if runtime_grads is not None:
+            return runtime_grads(params, batch, expert_perm)
         (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch, cfg, plan, mesh, expert_perm
         )

@@ -73,6 +73,11 @@ class TrainerConfig:
     # MixNet runtime reconfiguration
     reconfig_every: int = 0  # 0 = disabled (paper-faithful needs >0)
     reconfig_min_gain: float = 0.05
+    # DP gradient reduction: "auto" (XLA sharding propagation) or "runtime"
+    # (explicit CommRuntime hierarchical all-reduce inside shard_map over the
+    # batch axes — requires a DP-only mesh and an fsdp=False plan; see the
+    # repro.train.train_step module docstring).
+    dp_comm: str = "auto"
     # Straggler watchdog: warn when a step exceeds ema * factor.
     straggler_factor: float = 3.0
 
@@ -96,7 +101,8 @@ class Trainer:
         key = jax.random.PRNGKey(seed)
         self.params, self.specs, self.opt_state = init_all(key, cfg, plan, opt_cfg)
         self.step_fn = jax.jit(
-            make_train_step(cfg, plan, opt_cfg, mesh=mesh), donate_argnums=(0, 1)
+            make_train_step(cfg, plan, opt_cfg, mesh=mesh, dp_comm=tcfg.dp_comm),
+            donate_argnums=(0, 1),
         )
         self.step = 0
         self.metrics_log: list[dict] = []

@@ -1,0 +1,276 @@
+"""CommRuntime spec/op API: byte accounting per link class, fabric-priced
+costs shared with netsim (same CommSpec -> same bytes-on-link), the
+reconfiguration hook, and single-device degradation of every lowering."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import MIXTRAL_8X7B
+from repro.core import commruntime as cr
+from repro.core.fabric import FabricConfig, make_fabric
+from repro.core.netsim import GateTraceGenerator
+
+
+# ---------------------------------------------------------------------------
+# CommSpec
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation_and_factorization():
+    s = cr.CommSpec(axis="model", axis_size=8, group_size=4)
+    assert s.hierarchical and s.num_groups == 2
+    # degenerate group sizes run the flat lowering
+    assert not cr.CommSpec(axis="model", axis_size=8, group_size=1).hierarchical
+    assert not cr.CommSpec(axis="model", axis_size=8, group_size=8).hierarchical
+    with pytest.raises(ValueError):
+        cr.CommSpec(axis="model", axis_size=8, group_size=3)
+    with pytest.raises(ValueError):
+        cr.CommSpec(axis="model", axis_size=4, dest_perm=(0, 0, 1, 2))
+
+
+def test_spec_from_plan_degenerate_group():
+    from repro.parallel.sharding import ShardingPlan
+
+    plan = ShardingPlan(("data",), "model", 2, None, 4)
+    # group spanning the whole axis -> flat lowering (a one-group hierarchy)
+    s = cr.CommSpec.from_plan(plan, group_size=4)
+    assert s.axis == "model" and s.axis_size == 2 and s.group_size == 1
+    s1 = cr.CommSpec.from_plan(ShardingPlan((), None, 1, None, 1))
+    assert s1.axis is None and s1.axis_size == 1
+    # a non-divisible group below the axis size is a misconfiguration and
+    # must fail loudly (as _grid_groups always did), not degrade silently
+    with pytest.raises(ValueError):
+        cr.CommSpec.from_plan(
+            ShardingPlan(("data",), "model", 6, None, 1), group_size=4
+        )
+
+
+def test_reconfigure_hook_returns_same_op_class():
+    for op in (
+        cr.AllToAll(cr.CommSpec(axis="model", axis_size=4)),
+        cr.AllReduce(cr.CommSpec(axis="model", axis_size=4)),
+        cr.AllGather(cr.CommSpec(axis="model", axis_size=4), impl="ring"),
+        cr.ReduceScatter(cr.CommSpec(axis="model", axis_size=4)),
+        cr.Permute(cr.CommSpec(axis="model", axis_size=4)),
+    ):
+        new = op.reconfigure(dest_perm=np.array([1, 0, 3, 2]))
+        assert type(new) is type(op)
+        assert new.spec.dest_perm == (1, 0, 3, 2)
+        assert op.spec.dest_perm is None  # original untouched
+    # AllGather keeps its lowering choice through the hook
+    ag = cr.AllGather(cr.CommSpec(axis="model", axis_size=4), impl="flat")
+    assert ag.reconfigure(src_perm=[3, 2, 1, 0]).impl == "flat"
+
+
+def test_device_perm_from_slots():
+    # whole-device block swap collapses to a wire perm
+    np.testing.assert_array_equal(
+        cr.device_perm_from_slots(np.array([2, 3, 0, 1]), 2), [1, 0]
+    )
+    # intra-device reorder or cross-device slot scatter: no wire perm
+    assert cr.device_perm_from_slots(np.array([1, 0, 2, 3]), 2) is None
+    assert cr.device_perm_from_slots(np.array([0, 2, 1, 3]), 2) is None
+
+
+# ---------------------------------------------------------------------------
+# single-device degradation (every lowering must be callable without a mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_single_device_ops_are_identity():
+    spec = cr.CommSpec()
+    x = jnp.arange(24.0).reshape(2, 4, 3)
+    ids = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    assert (cr.AllToAll(spec)(x) == x).all()
+    px, pe = cr.AllToAll(spec).fused(x, ids)
+    assert (px == x).all() and (pe == ids).all()
+    assert (cr.AllReduce(spec)(x) == x).all()
+    assert (cr.AllGather(spec)(x) == x).all()
+    # untiled degenerate gather inserts the new dim at the REQUESTED axis
+    assert cr.AllGather(spec)(x, axis=1, tiled=False).shape == (2, 1, 4, 3)
+    assert (cr.ReduceScatter(spec)(x) == x).all()
+    assert (cr.Permute(spec)(x) == x).all()
+    # a cost-only reduction spec must refuse to execute, not mis-scale
+    with pytest.raises(ValueError):
+        cr.AllReduce(cr.CommSpec(axis=None, axis_size=8, group_size=8))(x)
+
+
+def test_fused_pack_exact_all_dtypes():
+    """The packed-lane encoding is exact across each dtype's documented id
+    range (and never emits NaN/Inf bit patterns a backend could rewrite)."""
+    ids16 = jnp.array([[-1, 0, 7, 255, 256, 2**16 - 2]], dtype=jnp.int32)
+    ids32 = jnp.array([[-1, 0, 7, 65535, 2**24 - 2]], dtype=jnp.int32)
+    for dt, ids in ((jnp.float32, ids32), (jnp.bfloat16, ids16), (jnp.float16, ids16)):
+        lanes = cr._ids_to_lanes(ids, dt)
+        assert lanes.dtype == jnp.dtype(dt)
+        assert np.isfinite(np.asarray(lanes, np.float64)).all()
+        np.testing.assert_array_equal(
+            np.asarray(cr._lanes_to_ids(lanes, dt)), np.asarray(ids)
+        )
+
+
+# ---------------------------------------------------------------------------
+# bytes-on-link accounting
+# ---------------------------------------------------------------------------
+
+
+def test_alltoall_bytes_flat_vs_hierarchical():
+    b = 1024.0
+    flat = cr.AllToAll(cr.CommSpec(axis="model", axis_size=8)).bytes_on_link(b)
+    assert flat.scale_out == pytest.approx(b * 7 / 8)
+    assert flat.scale_up == 0.0
+    hier = cr.AllToAll(
+        cr.CommSpec(axis="model", axis_size=8, group_size=4)
+    ).bytes_on_link(b)
+    assert hier.scale_up == pytest.approx(b * 3 / 4)   # stage 1 intra-group
+    assert hier.scale_out == pytest.approx(b * 1 / 2)  # stage 2: G=2 groups
+    # the delegation moves the scale-out share OFF the contended fabric
+    assert hier.scale_out < flat.scale_out
+    assert cr.AllToAll(cr.CommSpec()).bytes_on_link(b).total == 0.0
+
+
+def test_allreduce_bytes_hierarchy_cuts_cross_region():
+    b = 4096.0
+    flat = cr.AllReduce(cr.CommSpec(axis="data", axis_size=8)).bytes_on_link(b)
+    assert flat.cross_region == pytest.approx(2 * b * 7 / 8)
+    hier = cr.AllReduce(
+        cr.CommSpec(axis="data", axis_size=8, group_size=8,
+                    outer_axis="pod", outer_size=16)
+    ).bytes_on_link(b)
+    # cross-region ring carries 1/inner of the payload (§5.3)
+    assert hier.cross_region == pytest.approx(2 * (b / 8) * 15 / 16)
+    assert hier.cross_region < flat.cross_region
+
+
+def test_gather_scatter_permute_bytes():
+    b = 512.0
+    ag = cr.AllGather(cr.CommSpec(axis="model", axis_size=4)).bytes_on_link(b)
+    assert ag.scale_out == pytest.approx(b * 3)  # shard transits each ring hop
+    rs = cr.ReduceScatter(cr.CommSpec(axis="model", axis_size=4)).bytes_on_link(b)
+    assert rs.scale_out == pytest.approx(b * 3 / 4)
+    pm = cr.Permute(cr.CommSpec(axis="model", axis_size=4)).bytes_on_link(b)
+    assert pm.scale_out == pytest.approx(b)
+
+
+def test_uniform_demand_matches_bytes_on_link():
+    """Same CommSpec -> same accounting: a uniform inter-server demand built
+    from a per-server payload B has row sums equal to the flat op's
+    scale-out bytes."""
+    servers, b = 8, 1e9
+    spec = cr.CommSpec(axis=None, axis_size=servers)
+    demand = np.full((servers, servers), b / servers)
+    np.fill_diagonal(demand, 0.0)
+    link = cr.AllToAll(spec).bytes_on_link(b)
+    np.testing.assert_allclose(demand.sum(axis=1), link.total)
+    np.testing.assert_allclose(demand.sum(axis=0), link.total)
+
+
+# ---------------------------------------------------------------------------
+# wire re-addressing (the cost-model half of the reconfiguration hook)
+# ---------------------------------------------------------------------------
+
+
+def test_route_demand_permutes_physical_destinations():
+    d = np.arange(16.0).reshape(4, 4)
+    op = cr.AllToAll(cr.CommSpec(axis=None, axis_size=4)).reconfigure(
+        dest_perm=[2, 0, 3, 1]
+    )
+    np.testing.assert_array_equal(op.route_demand(d), d[:, [2, 0, 3, 1]])
+    # identity spec routes nothing
+    base = cr.AllToAll(cr.CommSpec(axis=None, axis_size=4))
+    assert base.route_demand(d) is d
+    with pytest.raises(ValueError):
+        op.route_demand(np.zeros((6, 6)))
+
+
+def test_route_demand_changes_cost_on_solved_circuits():
+    """After Algorithm 1 matches circuits to a skewed demand, re-addressing
+    the wire chunks away from those circuits must not get cheaper."""
+    rng = np.random.default_rng(0)
+    demand = rng.random((8, 8)) * 1e8
+    demand[0, 5] = 5e9  # hot pair the solver will provision
+    np.fill_diagonal(demand, 0.0)
+    fab = make_fabric("mixnet", FabricConfig(num_servers=8, link_gbps=100))
+    fab.prepare(demand)
+    op = cr.AllToAll(cr.CommSpec.from_fabric(fab, 8))
+    base = op.cost(fab, demand)
+    rotated = op.reconfigure(dest_perm=np.roll(np.arange(8), 1))
+    assert rotated.cost(fab, demand) >= base
+
+
+# ---------------------------------------------------------------------------
+# netsim <-> runtime cross-checks (acceptance: one cost model, not two)
+# ---------------------------------------------------------------------------
+
+
+def test_cost_equals_fabric_pricing_for_every_fabric():
+    """The op's cost is the fabric-priced completion of the routed demand —
+    netsim's phase costs and the runtime agree by construction."""
+    model = MIXTRAL_8X7B
+    trace = GateTraceGenerator(4, model.num_experts, seed=3)
+    demand = trace.device_demand(trace.step()[0], model, 8)
+    for name in ("mixnet", "fat-tree", "oversub-fat-tree", "rail-optimized"):
+        fab = make_fabric(name, FabricConfig(num_servers=8, link_gbps=400))
+        op = cr.AllToAll(cr.CommSpec.from_fabric(fab, 8))
+        assert op.cost(fab, demand) == pytest.approx(fab.alltoall_time(demand))
+        ar = cr.AllReduce(cr.CommSpec(
+            axis=None, axis_size=8, group_size=8, outer_size=fab.cfg.num_servers
+        ))
+        assert ar.cost(fab, 1e9) == pytest.approx(fab.allreduce_time(1e9))
+
+
+def test_simmodel_bytes_come_from_commruntime():
+    """netsim's SimModel byte sizes are the runtime helpers, not private
+    formulas."""
+    m = MIXTRAL_8X7B
+    assert m.a2a_bytes_total() == cr.ep_alltoall_bytes(
+        m.tokens_per_microbatch, m.top_k, m.d_model, m.dtype_bytes
+    )
+    assert m.dp_gradient_bytes_per_server(8) == cr.dp_gradient_bytes(
+        m.param_count(), m.gpus_per_stage * m.pp_degree, 8, m.dtype_bytes
+    )
+    # and the source keeps no duplicated inline formula
+    import inspect
+
+    from repro.core import netsim
+
+    src = inspect.getsource(netsim.SimModel.a2a_bytes_total)
+    assert "ep_alltoall_bytes" in src
+
+
+def test_from_fabric_factorization_follows_topology():
+    fab = make_fabric("mixnet", FabricConfig(num_servers=128, gpus_per_server=8))
+    s = cr.CommSpec.from_fabric(fab, 16)
+    assert s.axis_size == 16 * 8  # region servers x scale-up domain
+    assert s.group_size == 8 and s.hierarchical and s.num_groups == 16
+    assert s.outer_size == 128
+
+
+def test_netsim_simulation_unchanged_by_port():
+    """The ported costing is bit-compatible with the pre-port fabric-direct
+    formulas, checked against independently hand-written references (NOT the
+    ported code itself)."""
+    from repro.core.netsim import simulate_iteration
+
+    m = dataclasses.replace(MIXTRAL_8X7B, num_blocks=8)
+    # byte sizes: the historical inline formulas, written out literally
+    assert m.a2a_bytes_total() == (
+        m.tokens_per_microbatch * m.top_k * m.d_model * m.dtype_bytes
+    )
+    per_gpu = m.param_count() / max(m.gpus_per_stage * m.pp_degree, 1)
+    assert m.dp_gradient_bytes_per_server(8) == per_gpu * 8 * m.dtype_bytes
+    # phase pricing: the DP component of an iteration is exactly half the
+    # fabric-priced hierarchical all-reduce of those bytes (the pre-port
+    # `0.5 * fabric.allreduce_time(dp_bytes)` expression)
+    cfg = FabricConfig(num_servers=16, link_gbps=400)
+    fab = make_fabric("mixnet", cfg)
+    trace = GateTraceGenerator(m.layers_per_stage, m.num_experts, seed=7)
+    res = simulate_iteration(m, fab, trace, num_servers_region=4)
+    expected_dp = 0.5 * make_fabric("mixnet", cfg).allreduce_time(
+        m.dp_gradient_bytes_per_server(8)
+    )
+    assert res.dp_allreduce == pytest.approx(expected_dp)
+    assert res.a2a > 0

@@ -15,13 +15,13 @@ Evaluation plane: :mod:`repro.core.fabric`, :mod:`repro.core.netsim`,
 """
 
 from repro.core import (
-    collectives,
     commruntime,
     controlplane,
     copilot,
     cost,
     fabric,
     netsim,
+    overlap,
     placement,
     reconfig,
     topology,
@@ -30,5 +30,15 @@ from repro.core import (
 
 __all__ = [
     "collectives", "commruntime", "controlplane", "copilot", "cost", "fabric",
-    "netsim", "placement", "reconfig", "topology", "traffic",
+    "netsim", "overlap", "placement", "reconfig", "topology", "traffic",
 ]
+
+
+def __getattr__(name):
+    if name == "collectives":
+        # Imported lazily so `import repro.core` does not fire the shim's
+        # DeprecationWarning — only actual shim users see it.
+        from repro.core import collectives
+
+        return collectives
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -12,7 +12,16 @@ existing callers keep working; new code should not import this module.
 
 from __future__ import annotations
 
-from repro.core.commruntime import (
+import warnings
+
+warnings.warn(
+    "repro.core.collectives is deprecated; build a CommSpec + CollectiveOp "
+    "from repro.core.commruntime instead (DESIGN.md §7)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from repro.core.commruntime import (  # noqa: E402
     flat_all_to_all,
     hierarchical_all_to_all,
     hierarchical_psum,

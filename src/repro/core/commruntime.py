@@ -57,15 +57,19 @@ __all__ = [
     "AllGather",
     "ReduceScatter",
     "Permute",
+    "AllToAllStage",
     "ep_alltoall_bytes",
     "dp_gradient_bytes",
     "device_perm_from_slots",
+    "fuse_pack",
+    "fuse_unpack",
     # functional lowerings (re-exported by the repro.core.collectives shim)
     "flat_all_to_all",
     "hierarchical_all_to_all",
     "mixnet_all_to_all",
     "hierarchical_psum",
     "ring_all_gather",
+    "ring_reduce_scatter",
 ]
 
 
@@ -96,6 +100,30 @@ def flat_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
 
 
+def _a2a_scale_up(x: jax.Array, axis_name: str, group_size: int) -> jax.Array:
+    """Delegation stage 1 — intra-group exchange (the scale-up/NVSwitch
+    analogue): split/concat the h-chunk dim.  ``[P, ...]`` in and out."""
+    p = _axis_size(axis_name)
+    h = group_size
+    g = p // h
+    intra, _ = _grid_groups(p, h)
+    xr = x.reshape(g, h, *x.shape[1:])
+    z = lax.all_to_all(xr, axis_name, split_axis=1, concat_axis=1, axis_index_groups=intra)
+    return z.reshape(x.shape)
+
+
+def _a2a_scale_out(x: jax.Array, axis_name: str, group_size: int) -> jax.Array:
+    """Delegation stage 2 — inter-group exchange (the scale-out/OCS
+    analogue): split/concat the g-chunk dim.  ``[P, ...]`` in and out."""
+    p = _axis_size(axis_name)
+    h = group_size
+    g = p // h
+    _, inter = _grid_groups(p, h)
+    xr = x.reshape(g, h, *x.shape[1:])
+    w = lax.all_to_all(xr, axis_name, split_axis=0, concat_axis=0, axis_index_groups=inter)
+    return w.reshape(x.shape)
+
+
 def hierarchical_all_to_all(
     x: jax.Array, axis_name: str, group_size: int
 ) -> jax.Array:
@@ -109,20 +137,17 @@ def hierarchical_all_to_all(
 
     Returns:
       ``[P, ...]`` chunks ordered by source device — identical to
-      :func:`flat_all_to_all`.
+      :func:`flat_all_to_all`.  The two halves are exposed separately
+      through :meth:`AllToAll.stages` so the overlap scheduler can run
+      another chunk's compute between them.
     """
     p = _axis_size(axis_name)
     h = group_size
     if p == 1 or h == 1 or h >= p:
         return flat_all_to_all(x, axis_name)
-    g = p // h
-    intra, inter = _grid_groups(p, h)
-    xr = x.reshape(g, h, *x.shape[1:])
-    # Stage 1 — intra-group exchange (scale-up): split/concat the h-chunk dim.
-    z = lax.all_to_all(xr, axis_name, split_axis=1, concat_axis=1, axis_index_groups=intra)
-    # Stage 2 — inter-group exchange (scale-out): split/concat the g-chunk dim.
-    w = lax.all_to_all(z, axis_name, split_axis=0, concat_axis=0, axis_index_groups=inter)
-    return w.reshape(x.shape)
+    return _a2a_scale_out(
+        _a2a_scale_up(x, axis_name, h), axis_name, h
+    )
 
 
 def mixnet_all_to_all(
@@ -195,6 +220,38 @@ def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     src = (idx - jnp.arange(p)) % p
     order = jnp.argsort(src)
     return all_blocks[order].reshape(p * x.shape[0], *x.shape[1:])
+
+
+def ring_reduce_scatter(
+    x: jax.Array, axis_name: str, *, scatter_dim: int = 0
+) -> jax.Array:
+    """Explicit ring reduce-scatter via collective_permute stepping.
+
+    The partial destined for device ``d`` starts at ``d+1`` and rides the
+    ring for P-1 hops, each holder adding its own chunk — the overlap
+    building block (one :class:`Permute` hop per step interleaves with
+    compute).  Numerically a sum of the same terms as
+    ``lax.psum_scatter(tiled=True)`` in ring order (f32 summation order
+    differs from XLA's tree, so equality is allclose, exact for ints).
+    """
+    p = _axis_size(axis_name)
+    if p == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    xm = jnp.moveaxis(x, scatter_dim, 0)
+    if xm.shape[0] % p != 0:
+        raise ValueError(
+            f"dim {scatter_dim} ({x.shape[scatter_dim]}) not divisible by "
+            f"axis size {p}"
+        )
+    chunks = xm.reshape(p, xm.shape[0] // p, *xm.shape[1:])
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    # After t additions the partial this device holds is destined for
+    # device (idx - t); take(t) is the local chunk for that destination.
+    acc = chunks[(idx - 1) % p]
+    for t in range(1, p):
+        acc = lax.ppermute(acc, axis_name, perm) + chunks[(idx - 1 - t) % p]
+    return jnp.moveaxis(acc, 0, scatter_dim) if scatter_dim else acc
 
 
 # ---------------------------------------------------------------------------
@@ -456,6 +513,23 @@ def _lanes_to_ids(lanes: jax.Array, dtype) -> jax.Array:
     return lo + (hi << 8) - 1
 
 
+def fuse_pack(payload: jax.Array, ids: jax.Array) -> jax.Array | None:
+    """Pack int32 metadata into trailing exact lanes of ``payload``'s dtype
+    (one wire tensor for a staged transfer).  Returns ``None`` when the
+    payload dtype has no exact lane encoding (itemsize not 2/4) — callers
+    fall back to the unfused pair."""
+    if jnp.dtype(payload.dtype).itemsize not in (2, 4):
+        return None
+    lanes = lax.stop_gradient(_ids_to_lanes(ids, payload.dtype))
+    return jnp.concatenate([payload, lanes], axis=-1)
+
+
+def fuse_unpack(packed: jax.Array, d: int) -> tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`fuse_pack`: split a packed wire tensor back into
+    (payload ``[..., d]``, int32 ids)."""
+    return packed[..., :d], _lanes_to_ids(packed[..., d:], packed.dtype)
+
+
 @dataclasses.dataclass(frozen=True)
 class AllToAll(_OpBase):
     """EP all-to-all: flat or hierarchical/delegation per the spec.
@@ -489,16 +563,31 @@ class AllToAll(_OpBase):
         the unfused pair of transfers (tested) while the wire sees a single
         phase.  Metadata lanes carry no gradient.
         """
-        if jnp.dtype(payload.dtype).itemsize not in (2, 4):
+        packed = fuse_pack(payload, ids)
+        if packed is None:
             return (
                 self(payload, dest_perm=dest_perm, src_perm=src_perm),
                 self(ids[..., None], dest_perm=dest_perm, src_perm=src_perm)[..., 0],
             )
-        lanes = lax.stop_gradient(_ids_to_lanes(ids, payload.dtype))
-        packed = jnp.concatenate([payload, lanes], axis=-1)
         out = self(packed, dest_perm=dest_perm, src_perm=src_perm)
-        d = payload.shape[-1]
-        return out[..., :d], _lanes_to_ids(out[..., d:], payload.dtype)
+        return fuse_unpack(out, payload.shape[-1])
+
+    # -- staged execution (the overlap scheduler's surface) ------------------
+    def stages(self) -> tuple["AllToAllStage", ...]:
+        """The lowering's wire phases as separately-callable stages.
+
+        Hierarchical/delegation specs expose the scale-up and scale-out
+        halves (stage 0 applies the spec's ``dest_perm``, the last stage the
+        ``src_perm``); flat/degenerate specs expose one stage that IS the
+        whole op.  Composing the stages in order is bit-identical to
+        ``__call__`` — the split exists so the overlap engine
+        (:mod:`repro.core.overlap`) can run another chunk's compute between
+        a chunk's phases.  Each stage carries its own ``bytes_on_link``;
+        the stage byte totals sum to the op's.
+        """
+        if self.spec.hierarchical:
+            return (AllToAllStage(self, 0, 2), AllToAllStage(self, 1, 2))
+        return (AllToAllStage(self, 0, 1),)
 
     # -- analytic side ------------------------------------------------------
     def bytes_on_link(self, nbytes: float) -> LinkBytes:
@@ -537,21 +626,91 @@ class AllToAll(_OpBase):
 
 
 @dataclasses.dataclass(frozen=True)
+class AllToAllStage:
+    """One wire phase of an :class:`AllToAll` lowering (see
+    :meth:`AllToAll.stages`).
+
+    ``index``/``count`` identify the phase: for a 2-stage delegation spec,
+    stage 0 is the scale-up exchange (and applies ``dest_perm``), stage 1
+    the scale-out exchange (and applies ``src_perm``).  A 1-stage tuple's
+    only member runs the whole op.  Inputs and outputs keep the op's
+    ``[P, ...]`` layout so stages chain without reshapes.
+    """
+
+    op: AllToAll
+    index: int
+    count: int
+
+    @property
+    def link_class(self) -> str:
+        """Which LinkBytes class this stage's traffic rides."""
+        if self.count == 2 and self.index == 0:
+            return "scale_up"
+        return "scale_out"
+
+    def __call__(self, x, *, dest_perm=None, src_perm=None):
+        s = self.op.spec
+        if self.count == 1:
+            return self.op(x, dest_perm=dest_perm, src_perm=src_perm)
+        dperm, sperm = self.op._perms(dest_perm, src_perm)
+        if self.index == 0:
+            if dperm is not None:
+                x = x[dperm]
+            if s.axis is None:  # cost-only spec: no wire to exchange on
+                return x
+            return _a2a_scale_up(x, s.axis, s.group_size)
+        y = x if s.axis is None else _a2a_scale_out(x, s.axis, s.group_size)
+        if sperm is not None:
+            y = y[sperm]
+        return y
+
+    def bytes_on_link(self, nbytes: float) -> LinkBytes:
+        """This stage's share of the op's wire bytes — the SAME per-stage
+        accounting both the trainer's overlap scheduler and netsim's event
+        timeline consume."""
+        full = self.op.bytes_on_link(nbytes)
+        if self.count == 1:
+            return full
+        if self.index == 0:
+            return LinkBytes(scale_up=full.scale_up)
+        return LinkBytes(scale_out=full.scale_out)
+
+
+@dataclasses.dataclass(frozen=True)
 class AllReduce(_OpBase):
     """Hierarchical all-reduce (§5.3): reduce-scatter over the region,
-    all-reduce across regions on the gateway shard, all-gather back."""
+    all-reduce across regions on the gateway shard, all-gather back.
 
-    def __call__(self, x, *, scatter_dim: int = 0, mean: bool = False):
+    ``compress=True`` routes the reduction through the int8 codec of
+    :mod:`repro.optim.compress` — quantize against a pmax-shared scale, sum
+    exactly in int32 through the same reduce-scatter/ring/all-gather stages,
+    one shared dequantization — cutting wire bytes by ``dtype_bytes``x
+    (error feedback lives with the caller, which holds per-shard residual
+    state; see ``repro.train.train_step``).  The matching
+    ``compress_ratio`` on :meth:`bytes_on_link`/:meth:`cost` is how netsim
+    prices the identical savings.
+    """
+
+    def __call__(
+        self, x, *, scatter_dim: int = 0, mean: bool = False,
+        compress: bool = False,
+    ):
         s = self.spec
-        if s.axis is None:
-            if s.axis_size > 1:
-                # A cost-only spec (e.g. netsim's fabric-derived one) prices
-                # phases but names no mesh axis to reduce over — executing it
-                # would silently return unreduced (and mis-scaled) data.
-                raise ValueError(
-                    "cost-only AllReduce spec (axis=None, axis_size>1) has no "
-                    "executable lowering"
-                )
+        if s.axis is None and s.axis_size > 1:
+            # A cost-only spec (e.g. netsim's fabric-derived one) prices
+            # phases but names no mesh axis to reduce over — executing it
+            # would silently return unreduced (and mis-scaled) data.
+            raise ValueError(
+                "cost-only AllReduce spec (axis=None, axis_size>1) has no "
+                "executable lowering"
+            )
+        if compress:
+            from repro.optim.compress import compressed_hierarchical_psum
+
+            y = compressed_hierarchical_psum(
+                x, s.axis, s.outer_axis, scatter_dim=scatter_dim
+            )
+        elif s.axis is None:
             y = lax.psum(x, s.outer_axis) if s.outer_axis else x
         else:
             y = hierarchical_psum(x, s.axis, s.outer_axis, scatter_dim=scatter_dim)
@@ -559,8 +718,34 @@ class AllReduce(_OpBase):
             y = y / float(max(s.axis_size, 1) * max(s.outer_size, 1))
         return y
 
-    def bytes_on_link(self, nbytes: float) -> LinkBytes:
-        """Wire bytes for ``nbytes`` of per-device reduction payload."""
+    def compressed(self, x, *, scatter_dim: int = 0, mean: bool = False):
+        """Error-feedback-aware compressed reduction: returns
+        ``(reduced, local_decoded)`` where ``local_decoded`` (f32) is this
+        shard's own decoded contribution — what the caller's residual
+        subtracts (``repro.train.train_step``'s ``dp_compress`` path)."""
+        from repro.optim.compress import compressed_hierarchical_psum
+
+        s = self.spec
+        if s.axis is None and s.axis_size > 1:
+            raise ValueError(
+                "cost-only AllReduce spec (axis=None, axis_size>1) has no "
+                "executable lowering"
+            )
+        total, local = compressed_hierarchical_psum(
+            x, s.axis, s.outer_axis, scatter_dim=scatter_dim, with_local=True
+        )
+        if mean:
+            total = total / float(max(s.axis_size, 1) * max(s.outer_size, 1))
+        return total, local
+
+    def bytes_on_link(
+        self, nbytes: float, *, compress_ratio: float = 1.0
+    ) -> LinkBytes:
+        """Wire bytes for ``nbytes`` of per-device reduction payload.
+        ``compress_ratio`` scales the payload for the int8 path (e.g.
+        1/dtype_bytes) with the SAME accounting the trainer's compressed
+        reduction realizes."""
+        nbytes = nbytes * compress_ratio
         i, o = self.spec.axis_size, self.spec.outer_size
         if i <= 1 and o <= 1:
             return LinkBytes()
@@ -571,10 +756,11 @@ class AllReduce(_OpBase):
         return LinkBytes(cross_region=2.0 * nbytes * (i - 1) / i)
 
     def cost(
-        self, fabric, bytes_per_server: float, num_servers: int | None = None
+        self, fabric, bytes_per_server: float, num_servers: int | None = None,
+        *, compress_ratio: float = 1.0,
     ) -> float:
         n = num_servers or (self.spec.outer_size if self.spec.outer_size > 1 else None)
-        return fabric.allreduce_time(bytes_per_server, n)
+        return fabric.allreduce_time(bytes_per_server * compress_ratio, n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -589,8 +775,12 @@ class AllGather(_OpBase):
         s = self.spec
         if s.axis is None or s.axis_size <= 1:
             return x if tiled else jnp.expand_dims(x, axis)
-        if self.impl == "ring" and axis == 0 and tiled:
-            return ring_all_gather(x, s.axis)
+        if self.impl == "ring" and tiled:
+            if axis == 0:
+                return ring_all_gather(x, s.axis)
+            return jnp.moveaxis(
+                ring_all_gather(jnp.moveaxis(x, axis, 0), s.axis), 0, axis
+            )
         return lax.all_gather(x, s.axis, axis=axis, tiled=tiled)
 
     def bytes_on_link(self, nbytes: float) -> LinkBytes:
@@ -609,7 +799,14 @@ class AllGather(_OpBase):
 @dataclasses.dataclass(frozen=True)
 class ReduceScatter(_OpBase):
     """Tiled reduce-scatter over the regional axis (the hierarchical
-    all-reduce's first phase, exposed for overlap scheduling)."""
+    all-reduce's first phase, exposed for overlap scheduling).
+    ``impl='ring'`` runs the explicit Permute-ring stepping
+    (:func:`ring_reduce_scatter` — one collective_permute hop per step, the
+    overlap building block); ``impl='flat'`` the single-shot
+    ``lax.psum_scatter``.  Ring summation order differs from XLA's tree, so
+    cross-impl equality is allclose (exact for integer payloads)."""
+
+    impl: str = "flat"
 
     def __call__(self, x, *, scatter_dim: int = 0):
         s = self.spec
@@ -620,6 +817,8 @@ class ReduceScatter(_OpBase):
                 f"dim {scatter_dim} ({x.shape[scatter_dim]}) not divisible by "
                 f"axis size {s.axis_size}"
             )
+        if self.impl == "ring":
+            return ring_reduce_scatter(x, s.axis, scatter_dim=scatter_dim)
         return lax.psum_scatter(x, s.axis, scatter_dimension=scatter_dim, tiled=True)
 
     def bytes_on_link(self, nbytes: float) -> LinkBytes:

@@ -33,6 +33,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import commruntime as comm
+from repro.core import overlap
 from repro.core.controlplane import ControlPlane
 from repro.core.fabric import Fabric
 
@@ -69,6 +70,15 @@ class SimModel:
     vocab: int = 32000
     # Effective per-GPU compute throughput (flop/s) — A100 bf16 peak x MFU.
     flops_per_gpu: float = 312e12 * 0.4
+    # Chunked comm/compute overlap (repro.core.overlap, DESIGN.md §8): the
+    # per-layer dispatch->expert->combine phases run as a C-chunk software
+    # pipeline on the event timeline.  1 = the serial (additive) schedule,
+    # reproduced exactly.
+    overlap_chunks: int = 1
+    # Price the DP gradient reduction as int8-compressed (the trainer's
+    # dp_compress path): wire bytes scale by 1/dtype_bytes through the SAME
+    # AllReduce byte accounting.
+    dp_compress: bool = False
 
     # ---- derived sizes -----------------------------------------------------
     @property
@@ -239,6 +249,15 @@ class IterationResult:
     reconfig_blocked: float
     dp_allreduce: float
     pp_bubble: float
+    # Overlap accounting (DESIGN.md §8): the additive a2a total splits into
+    # the part hidden under the compute window by the chunked pipeline and
+    # the part that stays on the critical path.  hidden + exposed == a2a.
+    hidden_comm: float = 0.0
+    exposed_comm: float = 0.0
+    # Per-link-class bytes of ONE EP a2a phase, from the op's staged
+    # accounting (AllToAllStage.bytes_on_link — the same numbers the
+    # trainer's overlap scheduler consumes).
+    a2a_link_bytes: dict = dataclasses.field(default_factory=dict)
 
     def breakdown(self) -> dict:
         return dataclasses.asdict(self)
@@ -252,8 +271,8 @@ def _stage_times(
     num_servers_region: int,
     cp: ControlPlane,
     a2a_op: comm.AllToAll,
-) -> tuple[float, float, float]:
-    """One PP stage's communication over a FULL iteration (all microbatches).
+) -> tuple[float, float, float, float]:
+    """One PP stage's event timeline over a FULL iteration (all microbatches).
 
     Reconfiguration semantics follow Fig 20, driven entirely through the
     shared control-plane engine (DESIGN.md §3): the topology is reconfigured
@@ -265,15 +284,24 @@ def _stage_times(
     layer — with 25 ms OCS and production-size compute this is fully hidden
     (Fig 28's flat region), and degradation appears once the delay
     approaches the per-layer compute budget, reproducing Fig 28's cliff.
+
+    Each layer's dispatch->expert->combine phases run through the chunked
+    event timeline (:func:`repro.core.overlap.pipelined_phase`) with
+    ``model.overlap_chunks`` chunks; with 1 chunk the timeline IS the
+    pre-overlap additive sum.  Returns ``(timeline_seconds,
+    additive_a2a_seconds, blocked_seconds, exposed_comm_seconds)``.
     """
     attn_f = model.attention_time_per_layer()
     exp_f = model.expert_time_per_layer()
     m = model.num_microbatches
+    chunks = max(model.overlap_chunks, 1)
     # Compute window available to hide one reconfiguration: the layer's
     # compute across the iteration's microbatches (fwd + bwd ~ 3x fwd).
     hide_window = m * (attn_f + exp_f)
     a2a_total = 0.0
     blocked = 0.0
+    timeline = 0.0
+    exposed = 0.0
     for li in range(model.layers_per_stage):
         load = loads[li % loads.shape[0]]
         demand = trace.device_demand(load, model, num_servers_region)
@@ -290,19 +318,31 @@ def _stage_times(
                 pred_demand = trace.device_demand(pred, model, num_servers_region)
                 blocked += cp.apply(cp.plan(li, pred_demand, predicted=True))
             # else: reuse previous topology — no plan at all.
-        a2a_total += m * a2a_op.cost(fabric, demand)
+        t_disp = a2a_op.cost(fabric, demand)
         # --- FP a2a #2 (combine, transposed matrix): reconfig hidden when the
         # compute window allows; otherwise the overflow blocks the pipe.
         blocked += cp.apply(cp.plan(li, demand.T), hide_window=hide_window)
-        a2a_total += m * a2a_op.cost(fabric, demand.T)
-        # --- BP reconfig + a2a pair (same matrices, §5.1; window = bwd compute).
+        t_comb = a2a_op.cost(fabric, demand.T)
+        # --- BP reconfig + a2a pair (same matrices, §5.1; window = bwd
+        # compute) — priced AFTER the BP prepare, whose circuits come from
+        # the observed matrix (the FP pair may have run on predicted ones).
         blocked += cp.apply(cp.plan(li, demand), hide_window=2.0 * hide_window)
-        a2a_total += m * a2a_op.cost(fabric, demand)
-        a2a_total += m * a2a_op.cost(fabric, demand.T)
+        t_disp_bp = a2a_op.cost(fabric, demand)
+        t_comb_bp = a2a_op.cost(fabric, demand.T)
+        a2a_total += m * (t_disp + t_comb + t_disp_bp + t_comb_bp)
+        # Event timeline: attention is un-overlappable prefix compute; the
+        # chunked dispatch/FFN/combine pipeline hides comm under the expert
+        # window (bwd compute ~ 2x fwd, same a2a matrices).
+        fp_t, fp_x = overlap.pipelined_phase(
+            t_disp, exp_f, t_comb, chunks, serial_prefix=attn_f
+        )
+        bp_t, bp_x = overlap.pipelined_phase(
+            t_disp_bp, 2.0 * exp_f, t_comb_bp, chunks, serial_prefix=2.0 * attn_f
+        )
+        timeline += m * (fp_t + bp_t)
+        exposed += m * (fp_x + bp_x)
         cp.observe(li, load * model.tokens_per_microbatch * model.top_k)
-    fwd_compute = (attn_f + exp_f) * model.layers_per_stage
-    bwd_compute = 2.0 * fwd_compute
-    return m * (fwd_compute + bwd_compute), a2a_total, blocked
+    return timeline, a2a_total, blocked, exposed
 
 
 def simulate_iteration(
@@ -337,18 +377,32 @@ def simulate_iteration(
         group_size=max(gpus_per_server, 1),
         outer_size=max(fabric.cfg.num_servers, 1),
     ))
-    compute, a2a, blocked = _stage_times(
+    timeline, a2a, blocked, exposed = _stage_times(
         model, fabric, loads, trace, num_servers_region, controlplane, a2a_op
     )
     # 1F1B: the critical path stretches the per-stage work by (M+P-1)/M.
+    # ``timeline`` is the event-timeline per-stage time (== compute + a2a
+    # when overlap_chunks=1, smaller when the chunked pipeline hides comm).
     m, p = model.num_microbatches, model.pp_degree
     stretch = (m + p - 1) / m
-    pipeline = stretch * (compute + a2a)
-    bubble = (stretch - 1.0) * (compute + a2a)
-    # DP gradient all-reduce (hierarchical on MixNet), half overlapped with bwd.
+    pipeline = stretch * timeline
+    bubble = (stretch - 1.0) * timeline
+    # DP gradient all-reduce (hierarchical on MixNet), half overlapped with
+    # bwd; dp_compress prices the int8 wire through the same op accounting.
     dp_bytes = model.dp_gradient_bytes_per_server(gpus_per_server)
-    dp = 0.5 * dp_op.cost(fabric, dp_bytes)
+    dp_ratio = (1.0 / model.dtype_bytes) if model.dp_compress else 1.0
+    dp = 0.5 * dp_op.cost(fabric, dp_bytes, compress_ratio=dp_ratio)
     total = pipeline + blocked + dp
+    # Per-link bytes of one EP a2a phase through the op's staged accounting
+    # (the identical AllToAllStage.bytes_on_link the trainer's scheduler
+    # consumes for its chunk schedule).
+    phase_bytes = model.a2a_bytes_total() / max(num_servers_region, 1)
+    link_bytes: dict = {}
+    for stage in a2a_op.stages():
+        lb = stage.bytes_on_link(phase_bytes)
+        link_bytes[stage.link_class] = (
+            link_bytes.get(stage.link_class, 0.0) + getattr(lb, stage.link_class)
+        )
     return IterationResult(
         total=total,
         attn_compute=m * model.attention_time() * 3.0,
@@ -357,6 +411,9 @@ def simulate_iteration(
         reconfig_blocked=blocked,
         dp_allreduce=dp,
         pp_bubble=bubble,
+        hidden_comm=stretch * (a2a - exposed),
+        exposed_comm=stretch * exposed,
+        a2a_link_bytes=link_bytes,
     )
 
 

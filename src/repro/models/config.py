@@ -42,6 +42,13 @@ class MoEConfig:
     # Row-tile height of the dropless block layout (the grouped GEMM's unit of
     # expert ownership; 8 = f32 sublane minimum, raise towards 128 for MXU).
     dispatch_block: int = 8
+    # Chunked comm/compute overlap (repro.core.overlap, DESIGN.md §8): the
+    # mixnet backend splits the token dim into this many chunks and
+    # software-pipelines chunk k+1's dispatch a2a under chunk k's expert FFN
+    # under chunk k-1's combine a2a.  1 = the serial path; >1 is bit-identical
+    # to it (chunk rows are independent; capacity-mode keep decisions stay
+    # global).  Degrades to the nearest divisor of the local token count.
+    overlap_chunks: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +117,12 @@ class ModelConfig:
     # Explicit Megatron-SP shard_map for dense MLP + attention o-proj
     # (beyond-paper perf path: guarantees reduce-scatter TP combines).
     sp_shardmap: bool = False
+    # Double-buffered FSDP weight prefetch (repro.core.overlap, DESIGN.md §8):
+    # block l+1's FFN weights are gathered over the fsdp axis with the
+    # explicit AllGather ring while block l computes, instead of XLA's
+    # on-demand gather at first use.  Train mode only; needs a mesh with an
+    # fsdp axis.
+    fsdp_prefetch: bool = False
 
     # ---- derived -----------------------------------------------------------
     @property
@@ -221,6 +234,7 @@ class ModelConfig:
         if self.is_moe:
             assert self.moe.top_k <= self.moe.num_experts
             assert self.moe.dispatch in ("dropless", "capacity")
+            assert self.moe.overlap_chunks >= 1
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

@@ -20,7 +20,12 @@ sort-based dropless engine, DESIGN.md §6); this module owns the three
   (``ops.grouped_matmul`` — capacity buffers or the dropless block layout),
   and returned the same way (``ops.moe_combine``).  EP traffic never leaves
   the ``model`` axis — the regional locality the measurement study (§3)
-  found.  Runtime expert re-placement (the OCS-reconfiguration analogue) is
+  found.  With ``overlap_chunks > 1`` the whole dispatch/FFN/combine
+  sequence runs as a chunked software pipeline over ``AllToAll.stages()``
+  (:mod:`repro.core.overlap`, DESIGN.md §8) — chunk k+1's dispatch a2a
+  under chunk k's expert FFN under chunk k-1's combine, bit-identical to
+  the serial schedule.  Runtime expert re-placement (the
+  OCS-reconfiguration analogue) is
   realized by permuting expert->slot assignments *per layer*: the control
   plane (:mod:`repro.core.controlplane`) plans one permutation per MoE
   layer, the trainer gathers that layer's stacked expert weights into their
@@ -28,7 +33,10 @@ sort-based dropless engine, DESIGN.md §6); this module owns the three
   transformer scan feeds this module the matching row of the ``[repeats,
   E_virtual]`` ``expert_perm`` stack so the router addresses the new slots —
   the wire protocol itself never changes, exactly like pushing a per-region
-  cross-map to the OCS.
+  cross-map to the OCS.  Plans that move WHOLE device blocks skip the
+  weight gather entirely: the trainer installs a per-layer ``wire_perm``
+  device map and this module re-addresses the a2a's wire chunks instead
+  (``dest_perm``/``src_perm`` — the literal cross-map push).
 
 ``dense_decode`` — decode-time weight-stationary path: ALL experts computed
   densely on the handful of live tokens, combined with the routing core's
@@ -58,7 +66,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.commruntime import AllToAll, CommSpec
+from repro.core import overlap
+from repro.core.commruntime import AllToAll, CommSpec, fuse_pack, fuse_unpack
 from repro.kernels import ops
 from repro.models import routing
 from repro.models.routing import MoEStats, router_losses
@@ -203,8 +212,42 @@ def _moe_einsum(params, x, cfg, plan: ShardingPlan, mesh=None, expert_perm=None)
 # ---------------------------------------------------------------------------
 
 
-def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, axis_names):
-    """Per-device MoE body (runs inside shard_map, or standalone at P=1)."""
+def _wire_perms(wire_perm, p_axis):
+    """(dest_perm, src_perm) realizing a ControlPlane wire re-address.
+
+    ``wire_perm`` is the layer's device map ``D`` (logical device k's experts
+    physically live on device ``D[k]``, installed instead of a weight gather
+    when a placement plan moves whole device blocks).  The dispatch trip
+    re-addresses chunks with ``D^-1`` (physical device j serves logical
+    ``D^-1[j]``); the return trip restores logical order with ``D``.
+    """
+    if wire_perm is None:
+        return None, None
+    wire_src = wire_perm.astype(jnp.int32)
+    wire_dest = (
+        jnp.zeros((p_axis,), jnp.int32)
+        .at[wire_src]
+        .set(jnp.arange(p_axis, dtype=jnp.int32))
+    )
+    return wire_dest, wire_src
+
+
+def _moe_mixnet_local(
+    params_local, xl, cfg, plan: ShardingPlan, expert_perm, axis_names,
+    wire_perm=None,
+):
+    """Per-device MoE body (runs inside shard_map, or standalone at P=1).
+
+    ``cfg.moe.overlap_chunks > 1`` runs the chunked software pipeline
+    (DESIGN.md §8): the token dim splits into C chunks and chunk k+1's
+    dispatch a2a runs under chunk k's expert FFN under chunk k-1's combine,
+    each a2a further split into its delegation stages
+    (``AllToAll.stages()``).  Chunk rows are independent and capacity-mode
+    keep decisions are computed globally, so the chunked output is
+    bit-identical to the serial path (the only semantic divergence is the
+    stage-2 overflow regime of capacity mode, which the chunked layout does
+    not drop — see §8).
+    """
     e = cfg.moe
     ev, r = virtual_experts(e.num_experts, plan.model_size)
     p_axis = max(plan.model_size, 1)
@@ -216,6 +259,7 @@ def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, ax
     sc = e.top_k * r
     n = tl * sc
     xt = xl.reshape(tl, d)
+    act = _actfn(cfg.act)
 
     logits = xt.astype(jnp.float32) @ router
     info = routing.compute_routing(
@@ -224,72 +268,86 @@ def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, ax
     )
     flat_dev = (info.vdest // ev_local).reshape(n)
     local_e = (info.vdest % ev_local).reshape(n)
+    wire_dest, wire_src = _wire_perms(wire_perm, p_axis)
 
-    # --- stage 1: send buffers [P, Cp, D] + expert-id metadata -------------
-    # Dropless sizes the per-destination buffer at the worst case (all n
-    # choices to one device) so nothing overflows; capacity mode bounds the
-    # wire bytes of the a2a instead.
-    cp = n if dropless else routing.capacity(tl, sc, p_axis, e.capacity_factor)
+    # Stage-1 keep decisions are GLOBAL (chunk-invariant): dropless keeps
+    # everything; capacity mode keeps global rank < the serial capacity, so
+    # chunking never changes which tokens survive the send stage.
     rank1, _ = routing.bucket_ranks(flat_dev, p_axis)
-    plan1 = routing.capacity_plan(flat_dev, rank1, None, p_axis, cp)
-    src_tok = jnp.where(plan1.src >= 0, plan1.src // sc, -1)
-    send_x = ops.moe_dispatch(xt, src_tok).reshape(p_axis, cp, d)
-    send_e = jnp.where(
-        plan1.src >= 0, local_e[jnp.clip(plan1.src, 0, n - 1)], -1
-    ).reshape(p_axis, cp).astype(jnp.int32)
+    cp = n if dropless else routing.capacity(tl, sc, p_axis, e.capacity_factor)
+    keep1 = None if dropless else rank1 < cp
 
-    # --- hierarchical delegation all-to-all (the MixNet fabric) ------------
     # One CommRuntime op serves the whole layer: the dispatch trip moves the
     # token payload and its expert-id metadata as ONE packed wire transfer
     # (bit-identical payload to the unfused pair, tested), the return trip
     # reuses the same lowering.  P = 1 degrades to identity inside the op.
     a2a = AllToAll(CommSpec.from_plan(plan, group_size=e.a2a_group))
-    if e.a2a_fuse:
-        recv_x, recv_e = a2a.fused(send_x, send_e)
-    else:
-        recv_x = a2a(send_x)
-        recv_e = a2a(send_e[..., None])[..., 0]
+    chunks = overlap.chunk_count(tl, e.overlap_chunks)
 
-    # --- stage 2: pack by local expert, grouped Pallas GEMM, unpack ---------
-    rx = recv_x.reshape(p_axis * cp, d)
-    re = recv_e.reshape(p_axis * cp)
-    valid = re >= 0
-    rank2, counts2 = routing.bucket_ranks(re, ev_local, valid=valid)
-    act = _actfn(cfg.act)
-    if dropless:
-        plan2 = routing.dropless_plan(
-            re, rank2, counts2, valid, ev_local, e.dispatch_block
+    def expert_ffn_block(rx, re):
+        """Received rows -> per-expert pack -> grouped GEMM -> unpacked rows.
+        Returns (back rows aligned with the receive layout, kept count)."""
+        valid = re >= 0
+        rank2, counts2 = routing.bucket_ranks(re, ev_local, valid=valid)
+        if dropless or chunks > 1:
+            # Block layout: every valid received row is placed (the chunked
+            # pipeline uses it for capacity mode too — static shapes, and
+            # stage-2 never drops below the stage-1 capacity bound).
+            plan2 = routing.dropless_plan(
+                re, rank2, counts2, valid, ev_local, e.dispatch_block
+            )
+            packed = ops.moe_dispatch(rx, plan2.src).reshape(-1, e.dispatch_block, d)
+            be = plan2.block_experts
+            h = ops.grouped_matmul(packed, w_in, block_experts=be)
+            gt = ops.grouped_matmul(packed, w_gate, block_experts=be)
+            ye = ops.grouped_matmul(act(gt) * h, w_out, block_experts=be)
+        else:
+            c2 = routing.capacity(re.shape[0], 1, ev_local, e.capacity_factor)
+            plan2 = routing.capacity_plan(re, rank2, valid, ev_local, c2)
+            packed = ops.moe_dispatch(rx, plan2.src).reshape(ev_local, c2, d)
+            h = ops.grouped_matmul(packed, w_in)
+            gt = ops.grouped_matmul(packed, w_gate)
+            ye = ops.grouped_matmul(act(gt) * h, w_out)
+        back = ops.moe_dispatch(ye.reshape(plan2.num_rows, d), plan2.slot)
+        return back, plan2.kept
+
+    if chunks == 1:
+        # --- serial path: one send buffer, one a2a pair ---------------------
+        plan1 = routing.capacity_plan(flat_dev, rank1, keep1, p_axis, cp)
+        src_tok = jnp.where(plan1.src >= 0, plan1.src // sc, -1)
+        send_x = ops.moe_dispatch(xt, src_tok).reshape(p_axis, cp, d)
+        send_e = jnp.where(
+            plan1.src >= 0, local_e[jnp.clip(plan1.src, 0, n - 1)], -1
+        ).reshape(p_axis, cp).astype(jnp.int32)
+        if e.a2a_fuse:
+            recv_x, recv_e = a2a.fused(send_x, send_e, dest_perm=wire_dest)
+        else:
+            recv_x = a2a(send_x, dest_perm=wire_dest)
+            recv_e = a2a(send_e[..., None], dest_perm=wire_dest)[..., 0]
+        back, kept = expert_ffn_block(
+            recv_x.reshape(p_axis * cp, d), recv_e.reshape(p_axis * cp)
         )
-        packed = ops.moe_dispatch(rx, plan2.src).reshape(-1, e.dispatch_block, d)
-        be = plan2.block_experts
-        h = ops.grouped_matmul(packed, w_in, block_experts=be)
-        gt = ops.grouped_matmul(packed, w_gate, block_experts=be)
-        ye = ops.grouped_matmul(act(gt) * h, w_out, block_experts=be)
+        ret = a2a(back.reshape(p_axis, cp, d), src_perm=wire_src)
+        out = ops.moe_combine(
+            ret.reshape(p_axis * cp, d), plan1.slot.reshape(tl, sc), info.wfull
+        )
     else:
-        c2 = routing.capacity(p_axis * cp, 1, ev_local, e.capacity_factor)
-        plan2 = routing.capacity_plan(re, rank2, valid, ev_local, c2)
-        packed = ops.moe_dispatch(rx, plan2.src).reshape(ev_local, c2, d)
-        h = ops.grouped_matmul(packed, w_in)
-        gt = ops.grouped_matmul(packed, w_gate)
-        ye = ops.grouped_matmul(act(gt) * h, w_out)
-    back = ops.moe_dispatch(ye.reshape(plan2.num_rows, d), plan2.slot)
-    back = back.reshape(p_axis, cp, d)
-
-    # --- return trip + weighted combine -------------------------------------
-    ret = a2a(back)
-    out = ops.moe_combine(
-        ret.reshape(p_axis * cp, d), plan1.slot.reshape(tl, sc), info.wfull
-    )
+        # --- chunked software pipeline (repro.core.overlap) -----------------
+        out, kept = _mixnet_chunked(
+            xt, info, flat_dev, local_e, keep1, a2a, expert_ffn_block,
+            wire_dest, wire_src, chunks=chunks, p_axis=p_axis, sc=sc, cp=cp,
+            fuse=e.a2a_fuse,
+        )
     out = out.reshape(bl, sl, d).astype(xl.dtype)
 
     balance, z = router_losses(logits, info.idx, e.num_experts)
     load = routing.expert_load(info.idx, e.num_experts)
-    # Drop telemetry folds BOTH stages: plan2.kept counts received rows that
+    # Drop telemetry folds BOTH stages: `kept` counts received rows that
     # won an expert slot, i.e. choices that survived the send-buffer stage
     # AND the pack stage (stage-1 drops never arrive).  psum'ing kept and
     # offered over the mesh yields the global realized loss the control
     # plane acts on (exactly 0 in dropless mode).
-    kept = plan2.kept.astype(jnp.float32)
+    kept = kept.astype(jnp.float32)
     offered = jnp.asarray(float(n), jnp.float32)
     # Reduce telemetry over every mesh axis so replicated out_specs hold.
     for ax in axis_names:
@@ -302,21 +360,118 @@ def _moe_mixnet_local(params_local, xl, cfg, plan: ShardingPlan, expert_perm, ax
     return out, load, balance, z, drop
 
 
-def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm):
+def _mixnet_chunked(
+    xt, info, flat_dev, local_e, keep1, a2a, expert_ffn_block,
+    wire_dest, wire_src, *, chunks, p_axis, sc, cp, fuse,
+):
+    """Chunked double-buffered dispatch/FFN/combine pipeline (DESIGN.md §8).
+
+    The token dim splits into ``chunks`` equal chunks; each chunk runs
+    send-buffer build -> dispatch a2a (per delegation stage) -> expert FFN ->
+    return a2a (per stage) -> weighted combine, and the stage list executes
+    through :func:`repro.core.overlap.software_pipeline` so chunk k+1's
+    dispatch is issued under chunk k's FFN under chunk k-1's combine.
+    Returns (``[T, D]`` f32 combined output, kept-choice count).
+    """
+    tl, d = xt.shape
+    tc = tl // chunks
+    nc = tc * sc
+    # Per-chunk send capacity: dropless keeps the exact worst case (all nc
+    # choices to one device); capacity mode is bounded by the GLOBAL serial
+    # capacity (keep decisions are global, so no chunk exceeds it).
+    cp_c = nc if keep1 is None else min(nc, cp)
+    disp_stages = a2a.stages()
+    ret_stages = a2a.stages()
+    fused = fuse and jnp.dtype(xt.dtype).itemsize in (2, 4)
+
+    def s_build(_, k):
+        lo = k * nc
+        dest_c = jax.lax.slice_in_dim(flat_dev, lo, lo + nc)
+        keep_c = None if keep1 is None else jax.lax.slice_in_dim(keep1, lo, lo + nc)
+        rank_c, _ = routing.bucket_ranks(dest_c, p_axis, valid=keep_c)
+        plan1_c = routing.capacity_plan(dest_c, rank_c, keep_c, p_axis, cp_c)
+        src_tok = jnp.where(plan1_c.src >= 0, k * tc + plan1_c.src // sc, -1)
+        send_x = ops.moe_dispatch(xt, src_tok).reshape(p_axis, cp_c, d)
+        le_c = jax.lax.slice_in_dim(local_e, lo, lo + nc)
+        send_e = jnp.where(
+            plan1_c.src >= 0, le_c[jnp.clip(plan1_c.src, 0, nc - 1)], -1
+        ).reshape(p_axis, cp_c).astype(jnp.int32)
+        st = {"plan1": plan1_c}
+        if fused:
+            st["x"] = disp_stages[0](fuse_pack(send_x, send_e), dest_perm=wire_dest)
+        else:
+            st["x"] = disp_stages[0](send_x, dest_perm=wire_dest)
+            st["e"] = disp_stages[0](send_e[..., None], dest_perm=wire_dest)
+        return st
+
+    def s_disp2(st, _):
+        st = dict(st)
+        st["x"] = disp_stages[1](st["x"])
+        if not fused:
+            st["e"] = disp_stages[1](st["e"])
+        return st
+
+    def s_ffn(st, _):
+        if fused:
+            recv_x, recv_e = fuse_unpack(st["x"], d)
+        else:
+            recv_x, recv_e = st["x"], st["e"][..., 0]
+        back, kept_c = expert_ffn_block(
+            recv_x.reshape(p_axis * cp_c, d), recv_e.reshape(p_axis * cp_c)
+        )
+        back = back.reshape(p_axis, cp_c, d)
+        if len(ret_stages) == 1:
+            back = ret_stages[0](back, src_perm=wire_src)
+        else:
+            back = ret_stages[0](back)
+        return {"plan1": st["plan1"], "back": back, "kept": kept_c}
+
+    def s_ret2(st, _):
+        st = dict(st)
+        st["back"] = ret_stages[1](st["back"], src_perm=wire_src)
+        return st
+
+    def s_combine(st, k):
+        wf_c = jax.lax.slice_in_dim(info.wfull, k * tc, (k + 1) * tc)
+        out_c = ops.moe_combine(
+            st["back"].reshape(p_axis * cp_c, d),
+            st["plan1"].slot.reshape(tc, sc),
+            wf_c,
+        )
+        return out_c, st["kept"]
+
+    stage_fns = [s_build]
+    if len(disp_stages) == 2:
+        stage_fns.append(s_disp2)
+    stage_fns.append(s_ffn)
+    if len(ret_stages) == 2:
+        stage_fns.append(s_ret2)
+    stage_fns.append(s_combine)
+
+    results = overlap.software_pipeline(chunks, stage_fns)
+    out = jnp.concatenate([r[0] for r in results], axis=0)
+    kept = sum(r[1] for r in results)
+    return out, kept
+
+
+def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm, wire_perm=None):
     """``expert_perm`` is THIS layer's ``[E_virtual]`` expert->slot map (one
-    row of the trainer's per-layer perm stack)."""
+    row of the trainer's per-layer perm stack); ``wire_perm`` its optional
+    ``[P]`` device map when the plan was installed as a wire re-address
+    instead of a weight gather (``op.reconfigure`` semantics)."""
     e = cfg.moe
     ev, _ = virtual_experts(e.num_experts, plan.model_size)
 
-    def body(router, w_in, w_gate, w_out, xl, perm, axis_names=()):
+    def body(router, w_in, w_gate, w_out, xl, perm, wire=None, axis_names=()):
         return _moe_mixnet_local(
-            (router, w_in, w_gate, w_out), xl, cfg, plan, perm, axis_names
+            (router, w_in, w_gate, w_out), xl, cfg, plan, perm, axis_names,
+            wire_perm=wire,
         )
 
     if mesh is None or plan.model_size <= 1:
         out, load, balance, z, drop = body(
             params["router"], params["w_in"], params["w_gate"], params["w_out"],
-            x, expert_perm,
+            x, expert_perm, wire_perm,
         )
     else:
         ex_ax = plan.dim_axis(ev)
@@ -334,29 +489,39 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm):
         )
         seq_ax = plan.model_axis if s_sz % plan.model_size == 0 else None
         tok_spec = P(batch_ax, seq_ax, None)
-        fn = shard_map(
-            lambda r_, wi, wg, wo, xl, pm: body(
-                r_, wi, wg, wo, xl, pm, axis_names=axis_names
-            ),
-            mesh=mesh,
-            in_specs=(
-                P(None, None),
-                P(ex_ax, None, None),
-                P(ex_ax, None, None),
-                P(ex_ax, None, None),
-                tok_spec,
-                P(None),
-            ),
-            out_specs=(
-                tok_spec,
-                P(None), P(), P(), P(),
-            ),
-            check_vma=False,
+        weight_specs = (
+            P(None, None),
+            P(ex_ax, None, None),
+            P(ex_ax, None, None),
+            P(ex_ax, None, None),
         )
-        out, load, balance, z, drop = fn(
+        out_specs = (tok_spec, P(None), P(), P(), P())
+        args = [
             params["router"], params["w_in"], params["w_gate"], params["w_out"],
             x, expert_perm,
-        )
+        ]
+        if wire_perm is None:
+            fn = shard_map(
+                lambda r_, wi, wg, wo, xl, pm: body(
+                    r_, wi, wg, wo, xl, pm, axis_names=axis_names
+                ),
+                mesh=mesh,
+                in_specs=(*weight_specs, tok_spec, P(None)),
+                out_specs=out_specs,
+                check_vma=False,
+            )
+        else:
+            fn = shard_map(
+                lambda r_, wi, wg, wo, xl, pm, wr: body(
+                    r_, wi, wg, wo, xl, pm, wire=wr, axis_names=axis_names
+                ),
+                mesh=mesh,
+                in_specs=(*weight_specs, tok_spec, P(None), P(None)),
+                out_specs=out_specs,
+                check_vma=False,
+            )
+            args.append(wire_perm)
+        out, load, balance, z, drop = fn(*args)
     return out, MoEStats(load, balance, z, drop)
 
 
@@ -424,9 +589,15 @@ def moe_apply(
     *,
     mesh=None,
     expert_perm=None,
+    wire_perm=None,
     backend: str | None = None,
     mode: str | None = None,
 ):
+    """``wire_perm``: optional ``[P]`` device map from a wire-level
+    re-address (this layer's experts logically on device k physically live
+    on device ``wire_perm[k]``; weights were NOT gathered).  The mixnet
+    backend realizes it on the a2a wire; the dense backends compose it into
+    the slot addressing so every path hits the physically-resident weights."""
     e = cfg.moe
     backend = backend or e.backend
     if backend != "einsum" and (x.shape[1] == 1 or mode == "decode"):
@@ -434,10 +605,17 @@ def moe_apply(
         backend = "dense_decode"
     ev, _ = virtual_experts(e.num_experts, plan.model_size)
     perm = routing.resolve_perm(expert_perm, ev)
+    if wire_perm is not None and backend != "mixnet":
+        # Logical slot s lives at physical slot wire[s // epd] * epd + s % epd.
+        p_axis = max(plan.model_size, 1)
+        epd = ev // p_axis
+        wire = jnp.asarray(wire_perm, jnp.int32)
+        perm = wire[perm // epd] * epd + perm % epd
+        wire_perm = None
     if backend == "dense_decode":
         out, stats = _moe_dense_decode(params, x, cfg, plan, mesh=mesh, expert_perm=perm)
     elif backend == "mixnet":
-        out, stats = _moe_mixnet(params, x, cfg, plan, mesh, perm)
+        out, stats = _moe_mixnet(params, x, cfg, plan, mesh, perm, wire_perm=wire_perm)
     elif backend == "einsum":
         out, stats = _moe_einsum(params, x, cfg, plan, mesh=mesh, expert_perm=perm)
     else:

@@ -191,7 +191,7 @@ def init_caches(cfg, batch: int, max_len: int, plan: ShardingPlan | None = None)
 
 def _apply_block(
     kind, p, x, cfg, plan, mesh, mode, cache, t, enc_out, expert_perm, positions,
-    act_spec=None,
+    act_spec=None, wire_perm=None,
 ):
     new_cache = dict(cache) if cache is not None else ({} if mode != "train" else None)
     stats = None
@@ -230,7 +230,7 @@ def _apply_block(
         if cfg.is_moe:
             y, stats = moe_mod.moe_apply(
                 p["moe"], h2, cfg, plan, mesh=mesh, expert_perm=expert_perm,
-                mode=mode,
+                wire_perm=wire_perm, mode=mode,
             )
         elif cfg.sp_shardmap and L.can_use_sp_mlp(p["mlp"], h2, cfg, plan, mesh, mode):
             y = L.mlp_apply_sp(p["mlp"], h2, cfg, plan, mesh)
@@ -323,6 +323,14 @@ jax.tree_util.register_dataclass(
 )
 
 
+_FFN_PREFETCH_DIMS = {
+    # weight leaf -> (fsdp-sharded dim, model-sharded dim) per FFN kind,
+    # matching the init specs in layers.init_mlp / moe.init_moe.
+    "mlp": {"w_in": (0, 1), "w_gate": (0, 1), "w_out": (1, 0)},
+    "moe": {"w_in": (1, 0), "w_gate": (1, 0), "w_out": (2, 0)},
+}
+
+
 def model_apply(
     params,
     batch: dict,
@@ -334,11 +342,15 @@ def model_apply(
     caches=None,
     t=None,
     expert_perm=None,
+    wire_perm=None,
 ):
     """Run the model.
 
     ``batch``: tokens [B,S] (+ optional "frames" [B,Se,D] for audio,
     "patches" [B,Np,D] for vlm, "positions" for M-RoPE).
+    ``expert_perm``: [repeats, E_virtual] per-layer expert->slot maps;
+    ``wire_perm``: optional [repeats, P] per-layer device maps for plans the
+    control plane installed as wire re-addresses instead of weight gathers.
     Returns (features [B,S,D], aux, new_caches).  Use
     :func:`chunked_cross_entropy` / :func:`logits` on the features.
     """
@@ -386,9 +398,59 @@ def model_apply(
         {k: v for k, v in caches.items() if k != "__tail__"} if caches else None
     )
 
+    # --- FSDP weight prefetch (DESIGN.md §8): gather block l+1's FFN weights
+    # over the fsdp axis with the explicit AllGather ring while block l
+    # computes.  The gathered tree rides the scan carry (double buffer); the
+    # gather for the NEXT step is issued at the top of the body, before this
+    # step's compute, so its ring hops are independent of — and overlap —
+    # the current block's FFN.
+    from repro.core import overlap as overlap_mod
+
+    ffn_kinds = {}
+    if (
+        cfg.fsdp_prefetch and mesh is not None and plan.fsdp_axis is not None
+        and mode == "train"
+    ):
+        for name in names:
+            bp = params["blocks"][name]
+            if "moe" in bp:
+                ffn_kinds[name] = "moe"
+            elif "mlp" in bp:
+                ffn_kinds[name] = "mlp"
+    prefetch = bool(ffn_kinds)
+
+    def gather_ffn_group(li):
+        out = {}
+        for name, fkind in ffn_kinds.items():
+            sub = params["blocks"][name][fkind]
+            got = {}
+            for wname, (fdim, mdim) in _FFN_PREFETCH_DIMS[fkind].items():
+                if wname not in sub:
+                    continue
+                leaf = jax.lax.dynamic_index_in_dim(
+                    sub[wname], li, 0, keepdims=False
+                )
+                got[wname] = overlap_mod.ring_gather_leaf(
+                    leaf, mesh, plan.fsdp_axis, fdim, plan.model_axis, mdim
+                )
+            out[name] = got
+        return out
+
     def group_body(carry, xs):
-        x, full_caches, li = carry
-        group_params, perm = xs
+        if prefetch:
+            x, full_caches, li, gathered = carry
+        else:
+            x, full_caches, li = carry
+            gathered = None
+        if wire_perm is not None:
+            group_params, perm, wire = xs
+        else:
+            group_params, perm = xs
+            wire = None
+        if prefetch:
+            # Issue the NEXT block group's weight gather first — it depends
+            # only on li, so its ring hops overlap this group's compute.
+            nxt_gathered = gather_ffn_group(jnp.minimum(li + 1, reps - 1))
         new_caches = {} if mode != "train" else None
         stats_list = []
         for i, kind in enumerate(pattern):
@@ -401,9 +463,14 @@ def model_apply(
                     lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
                     full_caches[names[i]],
                 )
+            gp = group_params[names[i]]
+            if gathered is not None and names[i] in ffn_kinds:
+                fkind = ffn_kinds[names[i]]
+                gp = dict(gp)
+                gp[fkind] = {**gp[fkind], **gathered[names[i]]}
             x, nc, st = _apply_block(
-                kind, group_params[names[i]], x, cfg, plan, mesh, mode, cache_i, t,
-                enc_out, perm, positions, act_spec=_act_spec,
+                kind, gp, x, cfg, plan, mesh, mode, cache_i, t,
+                enc_out, perm, positions, act_spec=_act_spec, wire_perm=wire,
             )
             x = constrain(x, mesh, _act_spec)
             if new_caches is not None:
@@ -436,6 +503,8 @@ def model_apply(
         )
         load = stats_list[0].expert_load if stats_list else jnp.zeros((1,), jnp.float32)
         ys = (new_caches if full_caches is None else None, bal, zl, load)
+        if prefetch:
+            return (x, full_caches, li + 1, nxt_gathered), ys
         return (x, full_caches, li + 1), ys
 
     body = group_body
@@ -455,10 +524,18 @@ def model_apply(
         )
         perm_stack = jnp.broadcast_to(jnp.arange(ev, dtype=jnp.int32), (reps, ev))
 
-    xs = (params["blocks"], perm_stack)
-    (x, carried_caches, _), (stacked_caches, bal, zl, loads) = jax.lax.scan(
-        body, (x, scan_caches, jnp.zeros((), jnp.int32)), xs
+    xs = (
+        (params["blocks"], perm_stack)
+        if wire_perm is None
+        else (params["blocks"], perm_stack, wire_perm)
     )
+    init_carry = (x, scan_caches, jnp.zeros((), jnp.int32))
+    if prefetch:
+        init_carry = (*init_carry, gather_ffn_group(0))
+    carry_out, (stacked_caches, bal, zl, loads) = jax.lax.scan(
+        body, init_carry, xs
+    )
+    x, carried_caches = carry_out[0], carry_out[1]
     new_caches = carried_caches if carried_caches is not None else stacked_caches
 
     # Non-repeating tail blocks (e.g. recurrentgemma's final 2 RG-LRU layers).
@@ -472,6 +549,7 @@ def model_apply(
                 kind, params["tail"][name], x, cfg, plan, mesh, mode, cache_i, t,
                 enc_out, perm_stack[0] if perm_stack is not None else None, positions,
                 act_spec=_act_spec,
+                wire_perm=wire_perm[0] if wire_perm is not None else None,
             )
             if new_tail is not None:
                 new_tail[name] = nc if nc is not None else cache_i

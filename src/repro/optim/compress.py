@@ -19,6 +19,7 @@ __all__ = [
     "int8_encode",
     "int8_decode",
     "compressed_psum",
+    "compressed_hierarchical_psum",
     "error_feedback_update",
 ]
 
@@ -50,6 +51,52 @@ def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
     ).astype(jnp.int8)
     total = lax.psum(q.astype(jnp.int32), axis_name)
     return (total.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def compressed_hierarchical_psum(
+    x: jax.Array,
+    inner_axis: str | None,
+    outer_axis: str | None = None,
+    *,
+    scatter_dim: int = 0,
+    with_local: bool = False,
+):
+    """int8 hierarchical all-reduce — the codec run *through* the
+    CommRuntime :class:`~repro.core.commruntime.AllReduce` stages (§5.3):
+
+      quantize against a pmax-shared scale -> reduce-scatter inside the
+      region (int32, exact over the quantized values) -> all-reduce across
+      regions -> all-gather back -> ONE shared dequantization.
+
+    Wire bytes drop by ``dtype_bytes``x on every stage (int8 payload, the
+    scale scalar is noise); the integer sum is exact so the only error is
+    the shared quantization step — which the caller's error-feedback
+    residual absorbs across steps (:func:`error_feedback_update`).
+
+    ``with_local=True`` additionally returns this shard's own decoded
+    contribution (f32) — what error feedback subtracts to form the residual.
+    """
+    from repro.core.commruntime import hierarchical_psum
+
+    axes = [a for a in (inner_axis, outer_axis) if a]
+    if not axes:
+        return (x, x.astype(jnp.float32)) if with_local else x
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    for a in axes:
+        scale = lax.pmax(scale, a)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+    # The reduction IS the runtime's hierarchical lowering, applied to the
+    # quantized int32 payload (its divisibility fallback included) — one
+    # reduction topology, shared with the uncompressed path.
+    if inner_axis is None:
+        total = lax.psum(q, outer_axis)
+    else:
+        total = hierarchical_psum(q, inner_axis, outer_axis, scatter_dim=scatter_dim)
+    out = (total.astype(jnp.float32) * scale).astype(x.dtype)
+    if with_local:
+        return out, q.astype(jnp.float32) * scale
+    return out
 
 
 def error_feedback_update(grad, residual, encode_decode):

@@ -36,17 +36,21 @@ __all__ = [
     "make_train_step",
     "make_prefill_step",
     "make_serve_step",
+    "init_ef_residual",
     "loss_fn",
     "step_shardings",
 ]
 
 
-def loss_fn(params, batch, cfg, plan, mesh=None, expert_perm=None):
+def loss_fn(params, batch, cfg, plan, mesh=None, expert_perm=None, wire_perm=None):
     """``expert_perm``: ``[repeats, E_virtual]`` per-layer expert->slot maps
     from the control plane (distinct rows per layer after regional
-    reconfiguration); the transformer scan slices one row per repeat."""
+    reconfiguration); the transformer scan slices one row per repeat.
+    ``wire_perm``: optional ``[repeats, P]`` device maps for layers whose
+    plan was installed as a wire re-address instead of a weight gather."""
     feats, aux, _ = tfm.model_apply(
-        params, batch, cfg, plan, mesh=mesh, mode="train", expert_perm=expert_perm
+        params, batch, cfg, plan, mesh=mesh, mode="train", expert_perm=expert_perm,
+        wire_perm=wire_perm,
     )
     feats = constrain(feats, mesh, plan.activation_spec())
     ce = tfm.chunked_cross_entropy(params, feats, batch["labels"], cfg)
@@ -57,9 +61,25 @@ def loss_fn(params, batch, cfg, plan, mesh=None, expert_perm=None):
     return loss, (ce, aux)
 
 
-def _make_runtime_grad_fn(cfg, plan: ShardingPlan, mesh):
+def init_ef_residual(params, plan: ShardingPlan):
+    """Per-shard error-feedback residuals for ``dp_compress=True``: one f32
+    copy of every gradient leaf per DP shard, leading dim = the DP degree
+    (sharded over the batch axes inside the runtime shard_map)."""
+    d = max(plan.data_size, 1)
+    return jax.tree.map(
+        lambda p: jnp.zeros((d, *p.shape), jnp.float32), params
+    )
+
+
+def _make_runtime_grad_fn(cfg, plan: ShardingPlan, mesh, compress: bool = False):
     """Per-shard gradients inside shard_map over the batch axes, reduced with
-    the CommRuntime hierarchical AllReduce (``dp_comm="runtime"``)."""
+    the CommRuntime hierarchical AllReduce (``dp_comm="runtime"``).
+
+    ``compress=True`` routes the reduction through the int8 codec
+    (:mod:`repro.optim.compress`) riding the op's reduce-scatter stage, with
+    per-shard error-feedback residuals threaded by the caller — quantization
+    noise does not accumulate across steps, and the wire bytes drop by the
+    gradient dtype's width (the same ``compress_ratio`` netsim prices)."""
     if mesh is None or not plan.batch_axes or plan.model_size > 1:
         raise ValueError(
             "dp_comm='runtime' requires a data-parallel mesh without a model "
@@ -77,14 +97,30 @@ def _make_runtime_grad_fn(cfg, plan: ShardingPlan, mesh):
     local_plan = ShardingPlan((), None, 1, None, 1)
     reduce_op = AllReduce(CommSpec.for_grad_reduce(plan, mesh))
     tok_spec = P(plan.batch_axes, None)
-    out_specs = (P(), P(), P(), P())
 
-    def body(params, tokens, labels, expert_perm):
+    def body(params, tokens, labels, expert_perm, residual):
         (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, {"tokens": tokens, "labels": labels}, cfg, local_plan,
             None, expert_perm,
         )
-        grads = jax.tree.map(lambda g: reduce_op(g, mean=True), grads)
+        new_residual = None
+        if compress:
+            # Error feedback (Seide et al.): compress (grad + residual), keep
+            # this shard's own quantization error for the next step.  The
+            # int32 sum through the RS/ring/AG stages is exact, so the only
+            # noise is the shared quantization the residual absorbs.
+            flat_g, treedef = jax.tree.flatten(grads)
+            flat_r = treedef.flatten_up_to(residual)
+            red, res = [], []
+            for g, r in zip(flat_g, flat_r):
+                target = g.astype(jnp.float32) + r[0]
+                total, local = reduce_op.compressed(target, mean=True)
+                red.append(total.astype(g.dtype))
+                res.append((target - local)[None])
+            grads = jax.tree.unflatten(treedef, red)
+            new_residual = jax.tree.unflatten(treedef, res)
+        else:
+            grads = jax.tree.map(lambda g: reduce_op(g, mean=True), grads)
         stats = aux.moe_stats
         aux = dataclasses.replace(
             aux,
@@ -94,22 +130,33 @@ def _make_runtime_grad_fn(cfg, plan: ShardingPlan, mesh):
             balance_loss=reduce_op(aux.balance_loss, mean=True),
             z_loss=reduce_op(aux.z_loss, mean=True),
         )
-        return reduce_op(loss, mean=True), reduce_op(ce, mean=True), aux, grads
+        out = (reduce_op(loss, mean=True), reduce_op(ce, mean=True), aux, grads)
+        return out + ((new_residual,) if compress else ())
 
-    def grad_fn(params, batch, expert_perm):
-        if expert_perm is None:
-            f = shard_map(
-                lambda p, t, l: body(p, t, l, None), mesh=mesh,
-                in_specs=(P(), tok_spec, tok_spec), out_specs=out_specs,
-                check_vma=False,
-            )
-            return f(params, batch["tokens"], batch["labels"])
+    def grad_fn(params, batch, expert_perm, residual=None):
+        args = [params, batch["tokens"], batch["labels"]]
+        in_specs = [P(), tok_spec, tok_spec]
+        if expert_perm is not None:
+            args.append(expert_perm)
+            in_specs.append(P())
+        if compress:
+            args.append(residual)
+            in_specs.append(P(plan.batch_axes))
+        out_specs = (P(), P(), P(), P()) + (
+            (P(plan.batch_axes),) if compress else ()
+        )
+        has_perm = expert_perm is not None
+
+        def wrapped(*a):
+            pm = a[3] if has_perm else None
+            res = a[-1] if compress else None
+            return body(a[0], a[1], a[2], pm, res)
+
         f = shard_map(
-            body, mesh=mesh,
-            in_specs=(P(), tok_spec, tok_spec, P()), out_specs=out_specs,
+            wrapped, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs,
             check_vma=False,
         )
-        return f(params, batch["tokens"], batch["labels"], expert_perm)
+        return f(*args)
 
     return grad_fn
 
@@ -121,6 +168,7 @@ def make_train_step(
     mesh=None,
     microbatches: int = 1,
     dp_comm: str = "auto",
+    dp_compress: bool = False,
 ):
     """jit-able train step; ``microbatches > 1`` scans gradient accumulation
     over batch slices — activation live-set (and its reshard collectives per
@@ -128,24 +176,48 @@ def make_train_step(
     weights per slice (the classic trade; see EXPERIMENTS.md §Perf).
 
     ``dp_comm="runtime"`` routes the DP gradient reduction through the
-    CommRuntime's hierarchical all-reduce (see module docstring)."""
+    CommRuntime's hierarchical all-reduce (see module docstring);
+    ``dp_compress=True`` additionally runs it through the int8 +
+    error-feedback codec (``repro.optim.compress``) — the step then takes
+    an extra ``ef_residual`` pytree (:func:`init_ef_residual`) and returns
+    the updated one as a 4th output."""
     if dp_comm not in ("auto", "runtime"):
         raise ValueError(f"unknown dp_comm mode {dp_comm!r}")
+    if dp_compress and dp_comm != "runtime":
+        raise ValueError("dp_compress=True requires dp_comm='runtime'")
+    if dp_compress and microbatches > 1:
+        raise ValueError(
+            "dp_compress=True supports microbatches=1 only (the error-feedback "
+            "residual is a per-step state, not a per-slice one)"
+        )
     runtime_grads = (
-        _make_runtime_grad_fn(cfg, plan, mesh) if dp_comm == "runtime" else None
+        _make_runtime_grad_fn(cfg, plan, mesh, compress=dp_compress)
+        if dp_comm == "runtime"
+        else None
     )
 
-    def grad_once(params, batch, expert_perm):
+    def grad_once(params, batch, expert_perm, wire_perm, residual=None):
         if runtime_grads is not None:
-            return runtime_grads(params, batch, expert_perm)
+            if wire_perm is not None:
+                raise ValueError(
+                    "wire_perm needs a model axis; dp_comm='runtime' runs on a "
+                    "DP-only mesh"
+                )
+            out = runtime_grads(params, batch, expert_perm, residual)
+            return out if dp_compress else (*out, None)
         (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch, cfg, plan, mesh, expert_perm
+            params, batch, cfg, plan, mesh, expert_perm, wire_perm
         )
-        return loss, ce, aux, grads
+        return loss, ce, aux, grads, None
 
-    def train_step(params, opt_state, batch, expert_perm=None):
+    def train_step(
+        params, opt_state, batch, expert_perm=None, wire_perm=None,
+        ef_residual=None,
+    ):
         if microbatches <= 1:
-            loss, ce, aux, grads = grad_once(params, batch, expert_perm)
+            loss, ce, aux, grads, new_residual = grad_once(
+                params, batch, expert_perm, wire_perm, ef_residual
+            )
         else:
             b = batch["tokens"].shape[0]
             m = microbatches
@@ -153,8 +225,8 @@ def make_train_step(
 
             def mb_body(acc, xs):
                 tok, lab = xs
-                l, c, a, g = grad_once(
-                    params, {"tokens": tok, "labels": lab}, expert_perm
+                l, c, a, g, _ = grad_once(
+                    params, {"tokens": tok, "labels": lab}, expert_perm, wire_perm
                 )
                 acc = (
                     acc[0] + l / m,
@@ -170,7 +242,8 @@ def make_train_step(
                 jnp.zeros_like,
                 jax.eval_shape(
                     lambda: grad_once(
-                        params, {"tokens": toks[0], "labels": labs[0]}, expert_perm
+                        params, {"tokens": toks[0], "labels": labs[0]},
+                        expert_perm, wire_perm,
                     )[2]
                 ),
             )
@@ -181,6 +254,7 @@ def make_train_step(
                 jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params),
             )
             (loss, ce, aux, grads), _ = jax.lax.scan(mb_body, zeros, (toks, labs))
+            new_residual = None
         params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
         metrics = {
             "loss": loss,
@@ -191,6 +265,8 @@ def make_train_step(
         }
         if cfg.is_moe:
             metrics["expert_load"] = aux.moe_stats  # [repeats, E]
+        if dp_compress:
+            return params, opt_state, metrics, new_residual
         return params, opt_state, metrics
 
     return train_step

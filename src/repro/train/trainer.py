@@ -25,13 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.commruntime import device_perm_from_slots
 from repro.core.controlplane import ControlPlane, LayerPlan
 from repro.core.placement import inverse_permutation
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import ShardingPlan, virtual_experts
 from repro.train import checkpoint as ckpt
-from repro.train.train_step import init_all, make_train_step
+from repro.train.train_step import init_all, init_ef_residual, make_train_step
 
 __all__ = ["TrainerConfig", "Trainer", "permute_expert_weights"]
 
@@ -78,6 +79,10 @@ class TrainerConfig:
     # batch axes — requires a DP-only mesh and an fsdp=False plan; see the
     # repro.train.train_step module docstring).
     dp_comm: str = "auto"
+    # int8 + error-feedback gradient compression through the runtime
+    # reduction (requires dp_comm="runtime"); the trainer carries the
+    # per-shard residual state across steps.
+    dp_compress: bool = False
     # Straggler watchdog: warn when a step exceeds ema * factor.
     straggler_factor: float = 3.0
 
@@ -101,8 +106,14 @@ class Trainer:
         key = jax.random.PRNGKey(seed)
         self.params, self.specs, self.opt_state = init_all(key, cfg, plan, opt_cfg)
         self.step_fn = jax.jit(
-            make_train_step(cfg, plan, opt_cfg, mesh=mesh, dp_comm=tcfg.dp_comm),
+            make_train_step(
+                cfg, plan, opt_cfg, mesh=mesh, dp_comm=tcfg.dp_comm,
+                dp_compress=tcfg.dp_compress,
+            ),
             donate_argnums=(0, 1),
+        )
+        self.ef_residual = (
+            init_ef_residual(self.params, plan) if tcfg.dp_compress else None
         )
         self.step = 0
         self.metrics_log: list[dict] = []
@@ -112,6 +123,10 @@ class Trainer:
         # MixNet control plane (only meaningful for MoE archs).
         self.controlplane: ControlPlane | None = None
         self.expert_perm = None
+        # Wire-level re-addressing state: [L, P] per-layer device maps for
+        # plans realized on the a2a wire instead of by weight gathers.
+        self.wire_perm: np.ndarray | None = None
+        self.wire_reconfig_count = 0
         if cfg.is_moe and tcfg.reconfig_every:
             ev, r = virtual_experts(cfg.moe.num_experts, plan.model_size)
             self.controlplane = ControlPlane(
@@ -146,20 +161,73 @@ class Trainer:
             ckpt.save(self.tcfg.ckpt_dir, self.step, tree, keep=self.tcfg.ckpt_keep)
 
     # -- MixNet reconfiguration ------------------------------------------------
+    def _wire_capable(self) -> bool:
+        """Wire re-addressing needs the mixnet data plane and a control-plane
+        device space that IS the model axis (one slot block per device)."""
+        cp = self.controlplane
+        p = max(self.plan.model_size, 1)
+        return (
+            self.cfg.moe is not None
+            and self.cfg.moe.backend == "mixnet"
+            and p > 1
+            and cp is not None
+            and cp.num_devices == p
+        )
+
     def _apply_layer_plans(self, plans: list[LayerPlan]) -> bool:
-        """Actuate per-layer placement plans: gather each reconfiguring
-        layer's expert weights into their new slots, then compose the
-        router-side perms through the engine (``perm[base]`` ordering)."""
+        """Actuate per-layer placement plans.
+
+        A plan whose permutation moves whole device blocks is installed as a
+        **wire re-address** (``device_perm_from_slots`` -> the a2a's
+        ``op.reconfigure`` perms threaded to the model as ``wire_perm``) —
+        the expert weights never move, exactly like pushing a new cross-map
+        to the OCS.  Any other plan falls back to the weight gather,
+        flushing the layer's pending wire perm into the same gather so the
+        two realizations always compose.  Router-side perms go through the
+        engine either way (``perm[base]`` ordering).
+        """
         cp = self.controlplane
         live = [p for p in plans if p.reconfigure]
         if not live:
             return False
-        inv_stack = np.tile(
-            np.arange(cp.num_virtual, dtype=np.int64), (cp.num_layers, 1)
-        )
+        ev = cp.num_virtual
+        epd = cp.experts_per_device
+        p_axis = max(self.plan.model_size, 1)
+        wire_ok = self._wire_capable()
+        inv_stack = np.tile(np.arange(ev, dtype=np.int64), (cp.num_layers, 1))
+        gather_needed = False
         for p in live:
-            inv_stack[p.layer] = inverse_permutation(p.perm)
-        self.params = permute_expert_weights(self.params, inv_stack, cp.num_virtual)
+            devp = (
+                device_perm_from_slots(np.asarray(p.perm), epd) if wire_ok else None
+            )
+            if devp is not None:
+                # Wire path: the occupant of logical device a moves to device
+                # devp[a]; physically nothing moves, so the layer's device
+                # map composes as D'[k] = D[devp^-1[k]].
+                if self.wire_perm is None:
+                    self.wire_perm = np.tile(
+                        np.arange(p_axis, dtype=np.int64), (cp.num_layers, 1)
+                    )
+                d_cur = self.wire_perm[p.layer]
+                self.wire_perm[p.layer] = d_cur[inverse_permutation(devp)]
+                self.wire_reconfig_count += 1
+                continue
+            inv = inverse_permutation(p.perm)
+            if self.wire_perm is not None and (
+                self.wire_perm[p.layer] != np.arange(p_axis)
+            ).any():
+                # Flush the pending wire perm into this gather: new physical
+                # slot s receives Phi(perm^-1(s)) where Phi maps logical slot
+                # -> physical slot under the current device map.
+                d_cur = self.wire_perm[p.layer]
+                slots = np.arange(ev)
+                phi = d_cur[slots // epd] * epd + slots % epd
+                inv = phi[inv]
+                self.wire_perm[p.layer] = np.arange(p_axis)
+            inv_stack[p.layer] = inv
+            gather_needed = True
+        if gather_needed:
+            self.params = permute_expert_weights(self.params, inv_stack, ev)
         for p in live:
             cp.apply(p)
         self.expert_perm = cp.perm_stack()
@@ -210,10 +278,23 @@ class Trainer:
                 if self.expert_perm is not None
                 else None
             )
-            t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch, perm
+            wire = (
+                jnp.asarray(self.wire_perm, jnp.int32)
+                if self.wire_perm is not None
+                else None
             )
+            t0 = time.perf_counter()
+            if self.tcfg.dp_compress:
+                self.params, self.opt_state, metrics, self.ef_residual = (
+                    self.step_fn(
+                        self.params, self.opt_state, batch, perm, wire,
+                        self.ef_residual,
+                    )
+                )
+            else:
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch, perm, wire
+                )
             metrics = {
                 k: np.asarray(v) for k, v in metrics.items()
             }

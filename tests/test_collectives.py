@@ -233,3 +233,53 @@ def test_allgather_op_single_device_no_mesh():
     x = jnp.arange(6.0).reshape(2, 3)
     out = AllGather(CommSpec(), impl="ring")(x)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+DEPRECATION = """
+import subprocess, sys, warnings
+
+# importing the package namespace must NOT warn (collectives is lazy there)
+with warnings.catch_warnings():
+    warnings.simplefilter('error', DeprecationWarning)
+    import repro.core
+    import repro.core.commruntime
+
+# importing the shim itself MUST warn
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter('always')
+    import repro.core.collectives as shim
+assert any(issubclass(x.category, DeprecationWarning) for x in w), w
+# the lazy attribute resolves to the same (now-imported) module
+assert repro.core.collectives is shim
+# and still re-exports the lowerings unchanged
+from repro.core.commruntime import hierarchical_all_to_all
+assert shim.hierarchical_all_to_all is hierarchical_all_to_all
+print('DEPRECATION_OK')
+"""
+
+
+def test_collectives_shim_deprecation(multidevice):
+    """Satellite: the shim warns on import; `import repro.core` does not, and
+    no in-repo module still imports the shim (all internal importers are
+    ported to commruntime)."""
+    out = multidevice(DEPRECATION, devices=1)
+    assert "DEPRECATION_OK" in out
+
+
+def test_no_internal_shim_importers():
+    import os
+    import re
+
+    root = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    pat = re.compile(r"^\s*(from|import)\s+repro\.core\.collectives\b")
+    offenders = []
+    for dirpath, _, files in os.walk(root):
+        for f in files:
+            if not f.endswith(".py") or f == "collectives.py":
+                continue
+            path = os.path.join(dirpath, f)
+            with open(path) as fh:
+                for line in fh:
+                    if pat.match(line):
+                        offenders.append(path)
+    assert not offenders, offenders

@@ -23,6 +23,7 @@ claims, next to the paper's value:
   moe_dispatch             sort-based vs one-hot dispatch (BENCH_moe_dispatch.json)
   collectives              flat vs hierarchical vs fused a2a (BENCH_collectives.json)
   overlap                  serial vs chunked comm/compute schedule (BENCH_overlap.json)
+  serve                    reconfigurable serving engine + priced scenario (BENCH_serve.json)
   kernels                  Pallas-kernel oracle timings (framework table)
 """
 
@@ -725,6 +726,129 @@ def overlap(fast=False):
         json.dump(history, f, indent=2)
 
 
+def serve(fast=False):
+    """Serving engine + priced scenario (DESIGN.md §9, BENCH_serve.json).
+
+    (a) Engine side: a toy MoE served through ServeEngine with decode-time
+    reconfiguration ON vs OFF on the identical workload — tokens/s, TTFT
+    p50/p99, and the generation-consistency guarantee asserted bit-for-bit.
+    (b) Pricing side: netsim's serving tick loop — a reconfigured MixNet
+    fabric vs the static fat-tree EPS baseline, reporting TPOT, the
+    exposed-comm fraction per tick, and goodput-per-dollar.  The acceptance
+    gate: reconfigured goodput/$ must be >= the static EPS baseline."""
+    import dataclasses as dc
+    import json
+    import os
+
+    import jax
+
+    from repro.configs.paper_models import MIXTRAL_8X7B
+    from repro.core.fabric import FabricConfig, make_fabric
+    from repro.core.netsim import simulate_serving
+    from repro.models.config import ModelConfig, MoEConfig
+    from repro.models.transformer import init_model
+    from repro.parallel.sharding import make_plan
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.workload import WorkloadGenerator
+
+    # --- (a) engine side ----------------------------------------------------
+    plan = make_plan(None)
+    cfg = ModelConfig(
+        "srv", "moe", 2, 32, 4, 2, 0, 64, dtype="float32", remat="none",
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff=32, capacity_factor=8.0,
+                      backend="mixnet"),
+    )
+    params, _ = init_model(jax.random.PRNGKey(0), cfg, plan)
+    gen = WorkloadGenerator("chat", seed=3, vocab_size=cfg.vocab_size)
+    reqs = [
+        dc.replace(r, prompt_len=min(r.prompt_len, 24),
+                   max_new_tokens=min(r.max_new_tokens, 8))
+        for r in gen.generate(4 if fast else 8)
+    ]
+
+    def run_engine(reconfig):
+        scfg = ServeConfig(
+            slots=2, max_len=48, prefill_chunk=8,
+            reconfig_every=(4 if reconfig else 0), reconfig_min_gain=0.0,
+            num_devices=4,
+        )
+        eng = ServeEngine(jax.tree.map(lambda a: a, params), cfg, plan, scfg)
+        rep = eng.run(reqs, gen)
+        toks = {r.rid: tuple(r.out) for r in eng.batcher.finished}
+        return rep, toks
+
+    rep_off, toks_off = run_engine(False)
+    rep_on, toks_on = run_engine(True)
+    assert toks_on == toks_off, "reconfiguration changed generated tokens"
+    assert rep_on.reconfig_count > 0, "control loop never reconfigured"
+    _row(
+        "serve/engine", rep_on.wall_s * 1e6,
+        f"tok_s={rep_on.tokens_per_s:.1f} ttft_p50={rep_on.ttft_ticks_p50:.0f}t "
+        f"ttft_p99={rep_on.ttft_ticks_p99:.0f}t reconfigs={rep_on.reconfig_count} "
+        f"(tokens bit-identical to static run)",
+    )
+    entry = {
+        "bench": "serve",
+        "engine": {
+            "requests": rep_on.requests,
+            "tokens_out": rep_on.tokens_out,
+            "tokens_per_s": round(rep_on.tokens_per_s, 2),
+            "ttft_ticks_p50": rep_on.ttft_ticks_p50,
+            "ttft_ticks_p99": rep_on.ttft_ticks_p99,
+            "tpot_ticks_mean": round(rep_on.tpot_ticks_mean, 3),
+            "reconfig_count": rep_on.reconfig_count,
+            "a2a_bytes": rep_on.a2a_bytes,
+            "bit_identical_to_static": toks_on == toks_off,
+        },
+    }
+
+    # --- (b) pricing side ---------------------------------------------------
+    model = dc.replace(MIXTRAL_8X7B, num_blocks=8, overlap_chunks=4)
+    n_req = 24 if fast else 48
+    sims = []
+    for fname, reconfig in (("mixnet", True), ("fat-tree", False)):
+        fab = make_fabric(fname, FabricConfig(num_servers=128, link_gbps=400))
+        r = simulate_serving(
+            model, fab, mix="agentic", num_requests=n_req,
+            use_reconfig=reconfig, seed=1,
+        )
+        sims.append({
+            "fabric": fname,
+            "reconfig": reconfig,
+            "goodput_tok_s": round(r.goodput_tok_s, 1),
+            "goodput_per_mdollar": round(r.goodput_per_mdollar, 2),
+            "ttft_p50_ms": round(r.ttft_p50_s * 1e3, 3),
+            "tpot_p50_us": round(r.tpot_p50_s * 1e6, 2),
+            "exposed_comm_fraction": round(r.exposed_comm_fraction, 4),
+            "reconfig_count": r.reconfig_count,
+            "reconfig_blocked_ms": round(r.reconfig_blocked_s * 1e3, 3),
+        })
+        _row(
+            f"serve/netsim_{fname}", 0.0,
+            f"goodput={r.goodput_tok_s:.0f}tok/s per_M$={r.goodput_per_mdollar:.1f} "
+            f"tpot_p50={r.tpot_p50_s*1e6:.1f}us exposed={r.exposed_comm_fraction:.2f} "
+            f"reconfigs={r.reconfig_count}",
+        )
+    ratio = sims[0]["goodput_per_mdollar"] / sims[1]["goodput_per_mdollar"]
+    assert ratio >= 1.0, (
+        f"reconfigured goodput/$ fell below the static EPS baseline: {ratio:.2f}"
+    )
+    _row("serve/goodput_per_dollar", 0.0,
+         f"reconfigured_over_static={ratio:.2f}x (acceptance: >= 1.0)")
+    entry["netsim"] = sims
+    entry["goodput_per_dollar_ratio"] = round(ratio, 3)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_serve.json")
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
 def kernels(fast=False):
     """Framework table: Pallas kernels validated against oracles (interpret)
     + oracle-path timings on CPU."""
@@ -813,6 +937,7 @@ ALL = {
     "moe_dispatch": moe_dispatch,
     "collectives": collectives,
     "overlap": overlap,
+    "serve": serve,
     "kernels": kernels,
     "beyond_placement": beyond_placement,
     "beyond_a2a_hierarchy": beyond_a2a_hierarchy,

@@ -41,7 +41,41 @@ from repro.core.placement import (
 )
 from repro.core.traffic import TrafficMonitor
 
-__all__ = ["LayerPlan", "ControlPlane", "FailureHandler"]
+__all__ = [
+    "LayerPlan",
+    "ControlPlane",
+    "FailureHandler",
+    "PlacementApplier",
+    "permute_expert_weights",
+]
+
+
+def permute_expert_weights(params, inv_stack: np.ndarray, num_virtual: int):
+    """Gather every MoE block's stacked expert tensors into their new slots.
+
+    ``inv_stack`` is ``[L, E_virtual]`` of per-layer *inverse* permutations
+    (``inv[s]`` = the slot whose expert moves into slot ``s``); identity rows
+    leave a layer untouched.  Applied to every ``[L, E_virtual, ...]`` leaf
+    under ``params["blocks"][*]["moe"]`` — the weight-side half of a
+    reconfiguration, mirrored by the router-side ``perm_stack`` composition
+    in :meth:`ControlPlane.apply`.
+    """
+    import jax.numpy as jnp  # lazy: pure-simulation consumers stay jax-free
+
+    reps = inv_stack.shape[0]
+    rows = jnp.asarray(inv_stack)
+    gather_idx = (jnp.arange(reps)[:, None], rows)
+
+    def permute(leaf):
+        if leaf.ndim >= 2 and leaf.shape[0] == reps and leaf.shape[1] == num_virtual:
+            return leaf[gather_idx]
+        return leaf
+
+    for bparams in params["blocks"].values():
+        if "moe" in bparams:
+            for wname in ("w_in", "w_gate", "w_out"):
+                bparams["moe"][wname] = permute(bparams["moe"][wname])
+    return params
 
 
 @dataclasses.dataclass
@@ -360,6 +394,30 @@ class ControlPlane:
         """``[L, E_virtual]`` per-layer expert->slot maps for the router."""
         return self.layer_perms.astype(np.int32).copy()
 
+    # -- state round-trip (checkpointable placement, DESIGN.md §9) ------------
+    def state_dict(self) -> dict:
+        """JSON-serializable placement state: what a checkpoint must carry so
+        a restored server resumes with the SAME expert placement (the perm
+        stack composes against physically permuted weights — restoring one
+        without the other would misroute every token)."""
+        return {
+            "layer_perms": self.layer_perms.tolist(),
+            "reconfig_count": int(self.reconfig_count),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        perms = np.asarray(state["layer_perms"], dtype=np.int64)
+        if perms.shape != self.layer_perms.shape:
+            raise ValueError(
+                f"perm stack shape {perms.shape} does not match engine "
+                f"{self.layer_perms.shape}"
+            )
+        for row in perms:
+            if sorted(row.tolist()) != list(range(self.num_virtual)):
+                raise ValueError(f"not a permutation row: {row}")
+        self.layer_perms = perms
+        self.reconfig_count = int(state.get("reconfig_count", 0))
+
     # -- failures (§5.4) ------------------------------------------------------
     def fail_device(self, device: int) -> list[LayerPlan]:
         """A server/device drops out of the region.
@@ -402,3 +460,98 @@ class ControlPlane:
         if self.failures is None:
             raise ValueError("no failure bookkeeping for this region")
         return self.failures.remap()
+
+
+class PlacementApplier:
+    """Shared actuation of placement-mode :class:`LayerPlan` batches against
+    stacked expert weights — the runtime half both the trainer and the
+    serving engine drive (DESIGN.md §3/§9).
+
+    A plan whose permutation moves whole device blocks is installed as a
+    **wire re-address** (``device_perm_from_slots`` -> a per-layer ``[P]``
+    device map threaded to the a2a's ``dest_perm``/``src_perm``) — the
+    expert weights never move, exactly like pushing a new cross-map to the
+    OCS.  Any other plan falls back to the weight gather
+    (:func:`permute_expert_weights`), flushing the layer's pending wire perm
+    into the same gather so the two realizations always compose.
+    Router-side perms go through the engine either way (``perm[base]``
+    ordering in :meth:`ControlPlane.apply`).
+    """
+
+    def __init__(self, cp: ControlPlane, *, model_size: int = 1, wire_capable: bool = False):
+        self.cp = cp
+        self.model_size = max(model_size, 1)
+        # Wire re-addressing needs the mixnet data plane and a control-plane
+        # device space that IS the model axis (one slot block per device).
+        self.wire_capable = (
+            wire_capable
+            and self.model_size > 1
+            and cp.num_devices == self.model_size
+        )
+        self.wire_perm: np.ndarray | None = None
+        self.wire_reconfig_count = 0
+
+    def apply(self, params, plans: list[LayerPlan]):
+        """Actuate ``plans``; returns ``(params, changed)``."""
+        from repro.core.commruntime import device_perm_from_slots
+
+        cp = self.cp
+        live = [p for p in plans if p.reconfigure]
+        if not live:
+            return params, False
+        ev = cp.num_virtual
+        epd = cp.experts_per_device
+        p_axis = self.model_size
+        inv_stack = np.tile(np.arange(ev, dtype=np.int64), (cp.num_layers, 1))
+        gather_needed = False
+        for p in live:
+            devp = (
+                device_perm_from_slots(np.asarray(p.perm), epd)
+                if self.wire_capable
+                else None
+            )
+            if devp is not None:
+                # Wire path: the occupant of logical device a moves to device
+                # devp[a]; physically nothing moves, so the layer's device
+                # map composes as D'[k] = D[devp^-1[k]].
+                if self.wire_perm is None:
+                    self.wire_perm = np.tile(
+                        np.arange(p_axis, dtype=np.int64), (cp.num_layers, 1)
+                    )
+                d_cur = self.wire_perm[p.layer]
+                self.wire_perm[p.layer] = d_cur[inverse_permutation(devp)]
+                self.wire_reconfig_count += 1
+                continue
+            inv = inverse_permutation(p.perm)
+            if self.wire_perm is not None and (
+                self.wire_perm[p.layer] != np.arange(p_axis)
+            ).any():
+                # Flush the pending wire perm into this gather: new physical
+                # slot s receives Phi(perm^-1(s)) where Phi maps logical slot
+                # -> physical slot under the current device map.
+                d_cur = self.wire_perm[p.layer]
+                slots = np.arange(ev)
+                phi = d_cur[slots // epd] * epd + slots % epd
+                inv = phi[inv]
+                self.wire_perm[p.layer] = np.arange(p_axis)
+            inv_stack[p.layer] = inv
+            gather_needed = True
+        if gather_needed:
+            params = permute_expert_weights(params, inv_stack, ev)
+        for p in live:
+            cp.apply(p)
+        return params, True
+
+    # -- state round-trip -----------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "controlplane": self.cp.state_dict(),
+            "wire_perm": None if self.wire_perm is None else self.wire_perm.tolist(),
+            "wire_reconfig_count": int(self.wire_reconfig_count),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.cp.load_state_dict(state["controlplane"])
+        wp = state.get("wire_perm")
+        self.wire_perm = None if wp is None else np.asarray(wp, dtype=np.int64)
+        self.wire_reconfig_count = int(state.get("wire_reconfig_count", 0))

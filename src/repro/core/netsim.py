@@ -43,6 +43,8 @@ __all__ = [
     "IterationResult",
     "simulate_iteration",
     "simulate_training",
+    "ServingResult",
+    "simulate_serving",
 ]
 
 
@@ -70,6 +72,10 @@ class SimModel:
     vocab: int = 32000
     # Effective per-GPU compute throughput (flop/s) — A100 bf16 peak x MFU.
     flops_per_gpu: float = 312e12 * 0.4
+    # Per-GPU HBM bandwidth (bytes/s) — the serving scenario's decode ticks
+    # are memory-bound (every live token streams the expert weights), so
+    # their compute floor is weights-read time, not flops (DESIGN.md §9).
+    hbm_bytes_per_s: float = 1.6e12
     # Chunked comm/compute overlap (repro.core.overlap, DESIGN.md §8): the
     # per-layer dispatch->expert->combine phases run as a C-chunk software
     # pipeline on the event timeline.  1 = the serial (additive) schedule,
@@ -208,6 +214,7 @@ class GateTraceGenerator:
         num_servers: int,
         *,
         node_limit: int = 4,
+        total_bytes: float | None = None,
     ) -> np.ndarray:
         """Expert load fraction -> inter-server byte demand for one a2a.
 
@@ -217,9 +224,15 @@ class GateTraceGenerator:
           * group-limited gating (DeepSeek-V2/V3, cited by the paper) caps
             the number of *nodes* a token may route to, keeping the matrix
             sparse at server granularity even with hundreds of experts.
+
+        ``total_bytes`` overrides the phase volume (default: one training
+        microbatch's a2a) — the serving scenario passes the tick's live
+        decode + prefill-chunk payload instead (DESIGN.md §9).
         """
         e = self.num_experts
-        total = SimModel.a2a_bytes_total(model)
+        total = (
+            SimModel.a2a_bytes_total(model) if total_bytes is None else total_bytes
+        )
         per_src = total / max(num_servers, 1)
         per_server = max(e // max(num_servers, 1), 1)
         # Server-level attractiveness = summed load of its experts.
@@ -414,6 +427,260 @@ def simulate_iteration(
         hidden_comm=stretch * (a2a - exposed),
         exposed_comm=stretch * exposed,
         a2a_link_bytes=link_bytes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving scenario (DESIGN.md §9) — the inference analogue of Fig 26-28
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServingResult:
+    """Priced serving run on one fabric: latency percentiles, goodput, and
+    the Fig-13-style goodput-per-dollar the acceptance gate compares."""
+
+    fabric: str
+    ticks: int
+    sim_seconds: float
+    requests: int
+    completed: int
+    tokens_out: int
+    ttft_p50_s: float
+    ttft_p99_s: float
+    tpot_p50_s: float
+    tpot_p99_s: float
+    goodput_tok_s: float
+    cost_usd: float
+    goodput_per_mdollar: float  # decode tokens/s per M$ of interconnect
+    exposed_comm_fraction: float  # mean exposed/total a2a per tick
+    reconfig_count: int
+    reconfig_blocked_s: float
+    # Total EP a2a payload bytes across the run, accounted through the SAME
+    # CommRuntime formula (ep_alltoall_bytes) the real engine reports — the
+    # serving cross-check in tests/test_serve.py.
+    a2a_bytes_total: float
+
+    def breakdown(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def simulate_serving(
+    model: SimModel,
+    fabric: Fabric,
+    *,
+    mix="chat",
+    num_requests: int = 64,
+    slots: int = 16,
+    seed: int = 0,
+    use_reconfig: bool = True,
+    reconfig_every_ticks: int = 256,
+    prefill_chunk_tokens: int = 256,
+    num_servers_region: int | None = None,
+    gpus_per_server: int = 8,
+    max_ticks: int = 200_000,
+) -> ServingResult:
+    """Price a continuous-batching serving run of ``model`` on ``fabric``.
+
+    One tick = one engine decode step (:mod:`repro.serve.engine` at flow
+    level): every live slot decodes one token, up to ``prefill_chunk_tokens``
+    of pending prompt stream through the same tick (chunked prefill), and
+    each MoE layer pays a dispatch/combine a2a pair priced through the
+    CommRuntime op on the fabric — hidden under the decode + interleaved
+    prefill compute window by the chunked event timeline
+    (:func:`repro.core.overlap.decode_tick_phase`).
+
+    With ``use_reconfig`` the shared ControlPlane re-solves the regional OCS
+    cross-maps every ``reconfig_every_ticks`` from the drifting decode
+    demand (the request mix moves, §3's locality), amortizing the
+    reconfiguration delay over the window's compute; a static EPS fabric
+    (e.g. fat-tree) with ``use_reconfig=False`` is the baseline the
+    goodput-per-dollar gate compares against.
+    """
+    from repro.core import cost as costm
+    from repro.serve.workload import WorkloadGenerator
+
+    requests = WorkloadGenerator(mix, seed=seed).generate(num_requests)
+    region = num_servers_region or max(model.gpus_per_stage // gpus_per_server, 2)
+    trace = GateTraceGenerator(model.layers_per_stage, model.num_experts, seed=seed)
+    cp = (
+        ControlPlane.for_simulation(
+            model, fabric, num_servers_region=region, use_copilot=False
+        )
+        if use_reconfig
+        else None
+    )
+    a2a_op = comm.AllToAll(comm.CommSpec.from_fabric(fabric, region))
+    rate = model.flops_per_gpu * model.gpus_per_stage
+    layers = model.layers_per_stage
+    d, dff, k, dt = model.d_model, model.d_ff, model.top_k, model.dtype_bytes
+
+    pending = sorted(requests, key=lambda r: r.arrival_s)
+    cursor = 0
+    prefill_q: list = []  # [req, tokens_left]
+    live: list = []  # [req, tokens_left, context_len]
+    ttft: list[float] = []
+    tpot: list[float] = []
+    clock = 0.0
+    ticks = 0
+    tokens_out = 0
+    completed = 0
+    blocked_total = 0.0
+    a2a_total_s = 0.0
+    exposed_total_s = 0.0
+    a2a_bytes_total = 0.0
+    loads = trace.step()
+
+    while ticks < max_ticks:
+        # -- admission --------------------------------------------------------
+        while cursor < len(pending) and pending[cursor].arrival_s <= clock:
+            prefill_q.append([pending[cursor], pending[cursor].prompt_len])
+            cursor += 1
+        if not prefill_q and not live:
+            if cursor >= len(pending):
+                break
+            clock = pending[cursor].arrival_s  # idle: jump to next arrival
+            continue
+
+        # -- this tick's work -------------------------------------------------
+        n_live = len(live)
+        pf_tokens = 0
+        budget = prefill_chunk_tokens
+        finished_prefills = []
+        for item in prefill_q:
+            if budget <= 0 or len(live) + len(finished_prefills) >= slots:
+                break
+            take = min(budget, item[1])
+            item[1] -= take
+            budget -= take
+            pf_tokens += take
+            if item[1] == 0:
+                finished_prefills.append(item[0])
+
+        # Per-layer phase pricing: the a2a moves every routed token copy of
+        # the tick (live decode + prefill chunk) — the same byte formula the
+        # engine accounts (comm.ep_alltoall_bytes).
+        routed = n_live + pf_tokens
+        tick_s = 0.0
+        blocked_tick = 0.0
+        if routed:
+            tick_bytes = comm.ep_alltoall_bytes(routed, k, d, dt)
+            a2a_bytes_total += layers * tick_bytes
+            mean_ctx = (
+                np.mean([it[2] for it in live]) if live else 64.0
+            )
+            # Per-layer compute terms (flow level): decode attention is the
+            # un-overlappable prefix, expert FFN + the interleaved prefill
+            # chunk form the hideable window.  Decode is memory-bound: the
+            # floor is streaming the layer's expert weights (+ the KV cache)
+            # from HBM, which is what puts real decode ticks at ms scale and
+            # makes the 25 ms OCS hideable across a reconfiguration window.
+            hbm = model.hbm_bytes_per_s * model.gpus_per_stage
+            attn_t = max(
+                (2 * n_live * 4 * d * d + 2 * 2 * n_live * mean_ctx * d) / rate,
+                (n_live * mean_ctx * 2 * d * dt) / hbm,  # KV read
+            )
+            exp_t = max(
+                2 * n_live * k * 3 * d * dff / rate,
+                # dense-decode weight streaming: every expert's FFN weights
+                # transit HBM once per tick when any token is live.
+                (model.num_experts * 3 * d * dff * dt) / hbm,
+            )
+            pf_t = pf_tokens * (2 * 4 * d * d + 2 * k * 3 * d * dff) / rate
+            if ticks % 8 == 0:
+                loads = trace.step()
+            for li in range(layers):
+                demand = trace.device_demand(
+                    loads[li % loads.shape[0]], model, region,
+                    total_bytes=tick_bytes,
+                )
+                if cp is not None and reconfig_every_ticks and (
+                    ticks % reconfig_every_ticks == 0
+                ):
+                    # Amortized over the window: one layer's OCS slice is
+                    # idle while every OTHER phase of the stretch runs, so
+                    # the hide window is the full-tick compute of the whole
+                    # inter-reconfiguration stretch (§5.1's rule at serving
+                    # cadence).
+                    window = (
+                        reconfig_every_ticks * layers * (attn_t + exp_t + pf_t)
+                    )
+                    blocked_tick += cp.apply(
+                        cp.plan(li, demand), hide_window=window
+                    )
+                t_disp = a2a_op.cost(fabric, demand)
+                t_comb = a2a_op.cost(fabric, demand.T)
+                total_t, exposed_t = overlap.decode_tick_phase(
+                    t_disp, exp_t, t_comb, max(model.overlap_chunks, 1),
+                    attn=attn_t, prefill_compute=pf_t,
+                )
+                tick_s += total_t
+                a2a_total_s += t_disp + t_comb
+                exposed_total_s += exposed_t
+            if cp is not None:
+                for li in range(layers):
+                    cp.observe(
+                        li, loads[li % loads.shape[0]] * max(routed, 1) * k
+                    )
+                cp.end_step()
+        blocked_total += blocked_tick
+        clock += tick_s + blocked_tick  # un-hidden reconfig stalls the tick
+        ticks += 1
+
+        # -- bookkeeping: decode completions FIRST (only the slots that were
+        # live — and therefore routed — this tick emit), then the tick's
+        # finished prefills join the live set for the NEXT tick.
+        still = []
+        for it in live:
+            it[1] -= 1
+            it[2] += 1
+            tokens_out += 1
+            if it[1] <= 0:
+                completed += 1
+                span = max(clock - it[3], 0.0)
+                tpot.append(span / max(it[0].max_new_tokens - 1, 1))
+            else:
+                still.append(it)
+        live = still
+        for req in finished_prefills:
+            prefill_q = [it for it in prefill_q if it[0] is not req]
+            ttft.append(clock - req.arrival_s)
+            tokens_out += 1  # the prefill's next-token (first output)
+            if req.max_new_tokens <= 1:
+                completed += 1
+            else:
+                live.append([req, req.max_new_tokens - 1, req.prompt_len, clock])
+
+    pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
+    cost_usd = costm.fabric_cost(
+        fabric.name,
+        fabric.cfg.num_servers,
+        int(fabric.cfg.link_gbps),
+        nics_per_server=fabric.cfg.nics_per_server,
+        eps_nics=fabric.cfg.eps_nics,
+        ocs_nics=fabric.cfg.ocs_nics,
+        oversub_ratio=fabric.cfg.oversub_ratio,
+    )
+    sim_seconds = max(clock, 1e-12)
+    goodput = tokens_out / sim_seconds
+    return ServingResult(
+        fabric=fabric.name,
+        ticks=ticks,
+        sim_seconds=sim_seconds,
+        requests=len(requests),
+        completed=completed,
+        tokens_out=tokens_out,
+        ttft_p50_s=pct(ttft, 50),
+        ttft_p99_s=pct(ttft, 99),
+        tpot_p50_s=pct(tpot, 50),
+        tpot_p99_s=pct(tpot, 99),
+        goodput_tok_s=goodput,
+        cost_usd=cost_usd,
+        goodput_per_mdollar=goodput / (cost_usd / 1e6),
+        exposed_comm_fraction=exposed_total_s / max(a2a_total_s, 1e-12),
+        reconfig_count=cp.reconfig_count if cp is not None else 0,
+        reconfig_blocked_s=blocked_total,
+        a2a_bytes_total=a2a_bytes_total,
     )
 
 

@@ -36,6 +36,7 @@ __all__ = [
     "chunk_count",
     "software_pipeline",
     "pipelined_phase",
+    "decode_tick_phase",
     "ring_gather_leaf",
 ]
 
@@ -136,6 +137,36 @@ def pipelined_phase(
     total = serial_prefix + c_done[c - 1]
     exposed = max(total - serial_prefix - compute, 0.0)
     return total, exposed
+
+
+def decode_tick_phase(
+    dispatch: float,
+    expert: float,
+    combine: float,
+    chunks: int,
+    *,
+    attn: float = 0.0,
+    prefill_compute: float = 0.0,
+) -> tuple[float, float]:
+    """Event timeline of ONE serving decode tick per MoE layer (DESIGN.md §9).
+
+    A decode tick is the same dispatch -> expert-FFN -> combine phase the
+    trainer pipelines, at live-batch scale, with two serving-specific terms:
+    ``attn`` is the tick's un-overlappable decode-attention prefix (the
+    router needs its output), and ``prefill_compute`` is the interleaved
+    chunked-prefill work scheduled INTO this tick — compute with no ordering
+    dependence on the decode a2a, so it joins the hideable window.  That is
+    the scheduling argument for chunked prefill: tiny decode batches leave
+    the network exposed, and the prefill chunk is what widens the compute
+    window the a2a hides under.
+
+    Returns ``(total_seconds, exposed_comm_seconds)`` with the same
+    invariants as :func:`pipelined_phase` (``chunks=1`` with no prefill is
+    the additive serial tick).
+    """
+    return pipelined_phase(
+        dispatch, expert + prefill_compute, combine, chunks, serial_prefix=attn
+    )
 
 
 def ring_gather_leaf(

@@ -49,6 +49,12 @@ class MoEConfig:
     # to it (chunk rows are independent; capacity-mode keep decisions stay
     # global).  Degrades to the nearest divisor of the local token count.
     overlap_chunks: int = 1
+    # Decode-time MoE path (DESIGN.md §9): "dense" computes every expert on
+    # the handful of live tokens (weight-stationary, the §Perf default);
+    # "sparse" keeps the configured backend's sparse dispatch at decode — the
+    # mixnet backend then runs the EP all-to-all (with wire perms) for every
+    # decode tick, the serving engine's EP-sharded decode path.
+    decode_backend: str = "dense"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,6 +241,7 @@ class ModelConfig:
             assert self.moe.top_k <= self.moe.num_experts
             assert self.moe.dispatch in ("dropless", "capacity")
             assert self.moe.overlap_chunks >= 1
+            assert self.moe.decode_backend in ("dense", "sparse")
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

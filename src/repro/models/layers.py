@@ -113,47 +113,60 @@ def init_attention(key, cfg, plan) -> tuple[Params, Specs]:
 
 
 def _decode_attention(
-    q: jax.Array,  # [B, 1, H, dh]
-    k_new: jax.Array,  # [B, 1, Hkv, dh]
+    q: jax.Array,  # [B, C, H, dh]
+    k_new: jax.Array,  # [B, C, Hkv, dh]
     v_new: jax.Array,
     cache: dict,
-    t: jax.Array,  # current length (scalar int32)
+    t: jax.Array,  # first written position (scalar or [B])
     *,
     window: int | None,
     softcap: float | None,
+    write_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, dict]:
-    """One-token attention against a [B, S, Hkv, dh] cache (flash-decoding
-    layout: S shardable; reductions over S lower to local + all-reduce)."""
+    """Chunk attention against a [B, S, Hkv, dh] cache (flash-decoding
+    layout: S shardable; reductions over S lower to local + all-reduce).
+
+    ``C = 1`` is the classic decode step; ``C > 1`` is the chunked-prefill
+    continuation (DESIGN.md §9): positions ``t .. t+C-1`` are written into
+    the cache and attended causally together with the ``<= t`` prefix.
+    ``write_mask`` ([B] bool) suppresses the K/V write for dead batch rows —
+    a continuous-batching slot that is empty or still mid-chunked-prefill
+    must not have its cache stomped at a stale position."""
     ck, cv = cache["k"], cache["v"]
     b, s, hkv, dh = ck.shape
-    h = q.shape[2]
+    c, h = q.shape[1], q.shape[2]
     group = h // hkv
-    # Write the new K/V at position t (ring-buffer semantics beyond S).
-    # t may be a scalar (lockstep batch) or [B] (continuous batching:
+    # Write the new K/V at positions t..t+C-1 (ring-buffer semantics beyond
+    # S).  t may be a scalar (lockstep batch) or [B] (continuous batching:
     # every slot at its own position).
     t = jnp.broadcast_to(jnp.asarray(t), (b,))
-    idx = jnp.mod(t, s)
-    ck = ck.at[jnp.arange(b), idx].set(k_new[:, 0].astype(ck.dtype))
-    cv = cv.at[jnp.arange(b), idx].set(v_new[:, 0].astype(cv.dtype))
+    pos_c = t[:, None] + jnp.arange(c)  # [B, C] absolute positions
+    idx = jnp.mod(pos_c, s)
+    bi = jnp.arange(b)[:, None]
+    if write_mask is not None:
+        # Dead rows scatter out of bounds and are dropped.
+        idx = jnp.where(write_mask[:, None], idx, s)
+    ck = ck.at[bi, idx].set(k_new.astype(ck.dtype), mode="drop")
+    cv = cv.at[bi, idx].set(v_new.astype(cv.dtype), mode="drop")
     scale = dh**-0.5
     # bf16 operands + f32 accumulation: the cache is read in its own dtype
     # (no f32 copy of a multi-GB buffer), scores accumulate in f32.
-    qg = (q.reshape(b, h, dh) * scale).reshape(b, hkv, group, dh)
+    qg = (q * scale).reshape(b, c, hkv, group, dh)
     logits = jnp.einsum(
-        "bkgd,bskd->bkgs", qg, ck, preferred_element_type=jnp.float32
-    )  # [B, Hkv, group, S]
+        "bckgd,bskd->bkgcs", qg, ck, preferred_element_type=jnp.float32
+    )  # [B, Hkv, group, C, S]
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
     pos = jnp.arange(s)
-    valid = pos[None, :] <= t[:, None]  # [B, S]
+    valid = pos[None, None, :] <= pos_c[:, :, None]  # [B, C, S]
     if window is not None:
-        valid &= (t[:, None] - pos[None, :]) < window
-    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        valid &= (pos_c[:, :, None] - pos[None, None, :]) < window
+    logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum(
-        "bkgs,bskd->bkgd", probs.astype(cv.dtype), cv,
+        "bkgcs,bskd->bckgd", probs.astype(cv.dtype), cv,
         preferred_element_type=jnp.float32,
-    ).reshape(b, 1, h, dh)
+    ).reshape(b, c, h, dh)
     return out.astype(q.dtype), {"k": ck, "v": cv}
 
 
@@ -170,6 +183,7 @@ def attention_apply(
     attn_backend: str = "auto",
     plan=None,
     mesh=None,
+    write_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, dict | None]:
     import math
 
@@ -186,14 +200,16 @@ def attention_apply(
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
     if mode == "decode":
-        # Per-slot positions: t scalar (lockstep) or [B] (continuous batching).
-        pos = jnp.broadcast_to(jnp.asarray(t), (b,)).reshape(b, 1)
+        # Per-slot positions: t scalar (lockstep) or [B] (continuous
+        # batching); s > 1 writes the chunked-prefill positions t..t+s-1.
+        pos = jnp.broadcast_to(jnp.asarray(t), (b,))[:, None] + jnp.arange(s)
         if cfg.mrope_sections is not None:
             pos = jnp.stack([pos] * 3)
         q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, pos, cfg.rope_theta, cfg.mrope_sections)
         out, cache = _decode_attention(
-            q, k, v, cache, t, window=window, softcap=cfg.logit_softcap
+            q, k, v, cache, t, window=window, softcap=cfg.logit_softcap,
+            write_mask=write_mask,
         )
     else:
         q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
@@ -310,6 +326,7 @@ def mla_attention_apply(
     attn_backend: str = "auto",
     plan=None,
     mesh=None,
+    write_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, dict | None]:
     from jax.sharding import PartitionSpec as P
 
@@ -328,20 +345,27 @@ def mla_attention_apply(
     k_rope = ckv_full[..., m.kv_lora_rank :][:, :, None, :]  # [B,S,1,rope]
 
     if mode == "decode":
+        # s = 1 is the decode step, s > 1 the chunked-prefill continuation
+        # writing positions t..t+s-1 (attended causally within the chunk).
         tb = jnp.broadcast_to(jnp.asarray(t), (b,))
-        pos = tb.reshape(b, 1)
+        pos = tb[:, None] + jnp.arange(s)  # [B, s]
         q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
         k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
         c_cache, r_cache = cache["ckv"], cache["k_rope"]
         smax = c_cache.shape[1]
-        idx = jnp.mod(tb, smax)
-        c_cache = c_cache.at[jnp.arange(b), idx].set(ckv[:, 0].astype(c_cache.dtype))
-        r_cache = r_cache.at[jnp.arange(b), idx].set(
-            k_rope[:, 0, 0, :].astype(r_cache.dtype)
+        idx = jnp.mod(pos, smax)
+        bi = jnp.arange(b)[:, None]
+        if write_mask is not None:
+            idx = jnp.where(write_mask[:, None], idx, smax)  # drop dead rows
+        c_cache = c_cache.at[bi, idx].set(
+            ckv.astype(c_cache.dtype), mode="drop"
+        )
+        r_cache = r_cache.at[bi, idx].set(
+            k_rope[:, :, 0, :].astype(r_cache.dtype), mode="drop"
         )
         # Absorbed attention: score = q_nope·(W_uk c) + q_rope·k_rope.
         # Cache stays in its storage dtype; f32 only in the accumulators.
-        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])  # [B,1,H,r]
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])  # [B,s,H,r]
         logits = jnp.einsum(
             "bshr,btr->bhst", q_abs, c_cache, preferred_element_type=jnp.float32
         )
@@ -350,8 +374,8 @@ def mla_attention_apply(
         )
         scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
         logits = logits * scale
-        valid = jnp.arange(smax)[None, :] <= tb[:, None]  # [B, S]
-        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        valid = jnp.arange(smax)[None, None, :] <= pos[:, :, None]  # [B, s, S]
+        logits = jnp.where(valid[:, None, :, :], logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         ov = jnp.einsum(
             "bhst,btr->bshr", probs.astype(c_cache.dtype), c_cache,

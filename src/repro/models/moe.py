@@ -39,9 +39,13 @@ sort-based dropless engine, DESIGN.md §6); this module owns the three
   (``dest_perm``/``src_perm`` — the literal cross-map push).
 
 ``dense_decode`` — decode-time weight-stationary path: ALL experts computed
-  densely on the handful of live tokens, combined with the routing core's
-  virtual-slot gate map (which also applies ``expert_perm``, so decode stays
-  correct after a runtime reconfiguration).
+  densely on the handful of live tokens, combined by gathering each choice's
+  expert output through the routing core's virtual-slot map and summing in
+  GATE order — which both applies ``expert_perm`` and keeps decode tokens
+  BIT-identical across runtime reconfigurations (DESIGN.md §9).  MoE configs
+  with ``decode_backend="sparse"`` skip this path and keep the mixnet
+  backend's sparse EP dispatch at decode — the serving engine's
+  a2a-per-tick mode, where wire perms re-address the decode all-to-all.
 
 Dispatch semantics (``cfg.moe.dispatch``): **dropless** (default) routes
 every token — the einsum backend sizes its dense buffers at the worst case
@@ -234,7 +238,7 @@ def _wire_perms(wire_perm, p_axis):
 
 def _moe_mixnet_local(
     params_local, xl, cfg, plan: ShardingPlan, expert_perm, axis_names,
-    wire_perm=None,
+    wire_perm=None, token_axes=(), gate_weights=None,
 ):
     """Per-device MoE body (runs inside shard_map, or standalone at P=1).
 
@@ -259,6 +263,8 @@ def _moe_mixnet_local(
     sc = e.top_k * r
     n = tl * sc
     xt = xl.reshape(tl, d)
+    if gate_weights is not None:
+        gate_weights = gate_weights.reshape(tl)
     act = _actfn(cfg.act)
 
     logits = xt.astype(jnp.float32) @ router
@@ -341,7 +347,7 @@ def _moe_mixnet_local(
     out = out.reshape(bl, sl, d).astype(xl.dtype)
 
     balance, z = router_losses(logits, info.idx, e.num_experts)
-    load = routing.expert_load(info.idx, e.num_experts)
+    load = routing.expert_load(info.idx, e.num_experts, weights=gate_weights)
     # Drop telemetry folds BOTH stages: `kept` counts received rows that
     # won an expert slot, i.e. choices that survived the send-buffer stage
     # AND the pack stage (stage-1 drops never arrive).  psum'ing kept and
@@ -350,12 +356,16 @@ def _moe_mixnet_local(
     kept = kept.astype(jnp.float32)
     offered = jnp.asarray(float(n), jnp.float32)
     # Reduce telemetry over every mesh axis so replicated out_specs hold.
+    # Counts SUM over axes that shard the token dim and MEAN over axes the
+    # tokens ride replicated (the sparse decode path: every device sees the
+    # whole live batch — a psum there would overcount the load P-fold).
     for ax in axis_names:
-        load = jax.lax.psum(load, ax)
+        red = jax.lax.psum if ax in token_axes else jax.lax.pmean
+        load = red(load, ax)
         balance = jax.lax.pmean(balance, ax)
         z = jax.lax.pmean(z, ax)
-        kept = jax.lax.psum(kept, ax)
-        offered = jax.lax.psum(offered, ax)
+        kept = red(kept, ax)
+        offered = red(offered, ax)
     drop = 1.0 - kept / offered
     return out, load, balance, z, drop
 
@@ -454,24 +464,32 @@ def _mixnet_chunked(
     return out, kept
 
 
-def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm, wire_perm=None):
+def _moe_mixnet(
+    params, x, cfg, plan: ShardingPlan, mesh, expert_perm, wire_perm=None,
+    gate_weights=None,
+):
     """``expert_perm`` is THIS layer's ``[E_virtual]`` expert->slot map (one
     row of the trainer's per-layer perm stack); ``wire_perm`` its optional
     ``[P]`` device map when the plan was installed as a wire re-address
-    instead of a weight gather (``op.reconfigure`` semantics)."""
+    instead of a weight gather (``op.reconfigure`` semantics);
+    ``gate_weights`` an optional ``[B, S]`` per-token telemetry weight (the
+    serving engine's live-slot mask, DESIGN.md §9)."""
     e = cfg.moe
     ev, _ = virtual_experts(e.num_experts, plan.model_size)
 
-    def body(router, w_in, w_gate, w_out, xl, perm, wire=None, axis_names=()):
+    def body(
+        router, w_in, w_gate, w_out, xl, perm, wire=None, gw=None,
+        axis_names=(), token_axes=(),
+    ):
         return _moe_mixnet_local(
             (router, w_in, w_gate, w_out), xl, cfg, plan, perm, axis_names,
-            wire_perm=wire,
+            wire_perm=wire, token_axes=token_axes, gate_weights=gw,
         )
 
     if mesh is None or plan.model_size <= 1:
         out, load, balance, z, drop = body(
             params["router"], params["w_in"], params["w_gate"], params["w_out"],
-            x, expert_perm, wire_perm,
+            x, expert_perm, wire_perm, gate_weights,
         )
     else:
         ex_ax = plan.dim_axis(ev)
@@ -488,7 +506,14 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm, wire_perm
             else None
         )
         seq_ax = plan.model_axis if s_sz % plan.model_size == 0 else None
+        # Axes that actually shard the token dim (telemetry psums over these;
+        # axes the tokens ride replicated take pmean instead).
+        token_axes = (
+            tuple(a for a in (batch_ax or ()) if a)
+            + ((seq_ax,) if seq_ax else ())
+        )
         tok_spec = P(batch_ax, seq_ax, None)
+        gw_spec = P(batch_ax, seq_ax)
         weight_specs = (
             P(None, None),
             P(ex_ax, None, None),
@@ -500,27 +525,29 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm, wire_perm
             params["router"], params["w_in"], params["w_gate"], params["w_out"],
             x, expert_perm,
         ]
-        if wire_perm is None:
-            fn = shard_map(
-                lambda r_, wi, wg, wo, xl, pm: body(
-                    r_, wi, wg, wo, xl, pm, axis_names=axis_names
-                ),
-                mesh=mesh,
-                in_specs=(*weight_specs, tok_spec, P(None)),
-                out_specs=out_specs,
-                check_vma=False,
-            )
-        else:
-            fn = shard_map(
-                lambda r_, wi, wg, wo, xl, pm, wr: body(
-                    r_, wi, wg, wo, xl, pm, wire=wr, axis_names=axis_names
-                ),
-                mesh=mesh,
-                in_specs=(*weight_specs, tok_spec, P(None), P(None)),
-                out_specs=out_specs,
-                check_vma=False,
-            )
+        in_specs = [*weight_specs, tok_spec, P(None)]
+        has_wire = wire_perm is not None
+        has_gw = gate_weights is not None
+        if has_wire:
             args.append(wire_perm)
+            in_specs.append(P(None))
+        if has_gw:
+            args.append(gate_weights)
+            in_specs.append(gw_spec)
+
+        def wrapped(*a):
+            base, rest = a[:6], list(a[6:])
+            wire = rest.pop(0) if has_wire else None
+            gw = rest.pop(0) if has_gw else None
+            return body(
+                *base, wire=wire, gw=gw, axis_names=axis_names,
+                token_axes=token_axes,
+            )
+
+        fn = shard_map(
+            wrapped, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs,
+            check_vma=False,
+        )
         out, load, balance, z, drop = fn(*args)
     return out, MoEStats(load, balance, z, drop)
 
@@ -530,7 +557,10 @@ def _moe_mixnet(params, x, cfg, plan: ShardingPlan, mesh, expert_perm, wire_perm
 # ---------------------------------------------------------------------------
 
 
-def _moe_dense_decode(params, x, cfg, plan: ShardingPlan, mesh=None, expert_perm=None):
+def _moe_dense_decode(
+    params, x, cfg, plan: ShardingPlan, mesh=None, expert_perm=None,
+    gate_weights=None,
+):
     """Decode-time MoE: compute ALL experts densely on the handful of live
     tokens and combine with the (sparse) gate weights.
 
@@ -544,7 +574,15 @@ def _moe_dense_decode(params, x, cfg, plan: ShardingPlan, mesh=None, expert_perm
     The gate map comes from the routing core's virtual-slot destinations, so
     the layer's ``expert_perm`` re-addressing applies here exactly as it
     does on the sparse paths (decode after a runtime reconfiguration hits
-    physically permuted expert weights).
+    physically permuted expert weights).  The combine gathers each choice's
+    expert output by ``vdest`` and sums in GATE order — the contraction
+    never sees the physical slot positions, so decode tokens are
+    BIT-identical under any ``expert_perm`` (the DESIGN.md §9
+    generation-consistency guarantee; a dense ``[T, Ev]`` scatter would sum
+    in slot order, whose float association moves with the permutation).
+
+    ``gate_weights`` (``[B, S]``) weights the exported expert-load telemetry
+    per token — the serving engine's live-slot mask (DESIGN.md §9).
     """
     e = cfg.moe
     b, s, d = x.shape
@@ -555,13 +593,6 @@ def _moe_dense_decode(params, x, cfg, plan: ShardingPlan, mesh=None, expert_perm
         logits, top_k=e.top_k, num_virtual=ev, replication=r,
         expert_perm=expert_perm,
     )
-    # Scatter the kept top-k weights into a dense [T, Ev] map over PHYSICAL
-    # virtual slots (each of the r shards contributes a partial product).
-    wv = (
-        jnp.zeros((b * s, ev), jnp.float32)
-        .at[jnp.arange(b * s)[:, None], info.vdest]
-        .add(info.wfull)
-    )
 
     ex_ax = plan.dim_axis(ev)
     h = jnp.einsum("td,edf->tef", xt, params["w_in"])
@@ -569,10 +600,12 @@ def _moe_dense_decode(params, x, cfg, plan: ShardingPlan, mesh=None, expert_perm
     h = _actfn(cfg.act)(g) * h
     h = constrain(h, mesh, P(None, ex_ax, None))
     y = jnp.einsum("tef,efd->ted", h, params["w_out"])
-    out = jnp.einsum("te,ted->td", wv.astype(y.dtype), y).reshape(b, s, d)
+    ysel = jnp.take_along_axis(y, info.vdest[:, :, None], axis=1)  # [T, S, D]
+    out = jnp.einsum("ts,tsd->td", info.wfull.astype(y.dtype), ysel)
+    out = out.reshape(b, s, d)
 
     balance, z = router_losses(logits, info.idx, e.num_experts)
-    load = routing.expert_load(info.idx, e.num_experts)
+    load = routing.expert_load(info.idx, e.num_experts, weights=gate_weights)
     return out, MoEStats(load, balance, z, jnp.zeros((), jnp.float32))
 
 
@@ -592,17 +625,24 @@ def moe_apply(
     wire_perm=None,
     backend: str | None = None,
     mode: str | None = None,
+    gate_weights: jax.Array | None = None,
 ):
     """``wire_perm``: optional ``[P]`` device map from a wire-level
     re-address (this layer's experts logically on device k physically live
     on device ``wire_perm[k]``; weights were NOT gathered).  The mixnet
     backend realizes it on the a2a wire; the dense backends compose it into
-    the slot addressing so every path hits the physically-resident weights."""
+    the slot addressing so every path hits the physically-resident weights.
+    ``gate_weights``: optional ``[B, S]`` per-token telemetry weight — the
+    serving engine's live-slot mask, so the exported expert load counts only
+    occupied decode slots (DESIGN.md §9)."""
     e = cfg.moe
     backend = backend or e.backend
     if backend != "einsum" and (x.shape[1] == 1 or mode == "decode"):
-        # Single-token decode: weight-stationary dense path (see docstring).
-        backend = "dense_decode"
+        # Single-token decode: weight-stationary dense path (see docstring)
+        # unless the config pins the sparse EP dispatch at decode — the
+        # serving engine's a2a-per-tick path (``MoEConfig.decode_backend``).
+        if not (backend == "mixnet" and e.decode_backend == "sparse"):
+            backend = "dense_decode"
     ev, _ = virtual_experts(e.num_experts, plan.model_size)
     perm = routing.resolve_perm(expert_perm, ev)
     if wire_perm is not None and backend != "mixnet":
@@ -613,9 +653,15 @@ def moe_apply(
         perm = wire[perm // epd] * epd + perm % epd
         wire_perm = None
     if backend == "dense_decode":
-        out, stats = _moe_dense_decode(params, x, cfg, plan, mesh=mesh, expert_perm=perm)
+        out, stats = _moe_dense_decode(
+            params, x, cfg, plan, mesh=mesh, expert_perm=perm,
+            gate_weights=gate_weights,
+        )
     elif backend == "mixnet":
-        out, stats = _moe_mixnet(params, x, cfg, plan, mesh, perm, wire_perm=wire_perm)
+        out, stats = _moe_mixnet(
+            params, x, cfg, plan, mesh, perm, wire_perm=wire_perm,
+            gate_weights=gate_weights,
+        )
     elif backend == "einsum":
         out, stats = _moe_einsum(params, x, cfg, plan, mesh=mesh, expert_perm=perm)
     else:

@@ -143,9 +143,23 @@ def resolve_perm(expert_perm, num_virtual: int) -> jax.Array:
     return perm
 
 
-def expert_load(idx: jax.Array, num_experts: int) -> jax.Array:
-    """[E] f32 routed-token counts per real expert (scatter-add, no one-hot)."""
-    return jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+def expert_load(
+    idx: jax.Array, num_experts: int, weights: jax.Array | None = None
+) -> jax.Array:
+    """[E] f32 routed-token counts per real expert (scatter-add, no one-hot).
+
+    ``weights`` is an optional per-token weight ``[T]`` (broadcast over the
+    top-k choices).  The serving engine passes the live-slot mask here so the
+    control plane's monitor only sees traffic from occupied decode slots —
+    the decode-path gate-stat export (DESIGN.md §9); ``None`` keeps the
+    historical unweighted count.
+    """
+    if weights is None:
+        contrib = jnp.ones(idx.size, jnp.float32)
+    else:
+        k = idx.shape[-1]
+        contrib = jnp.repeat(weights.reshape(-1).astype(jnp.float32), k)
+    return jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(contrib)
 
 
 def router_losses(logits: jax.Array, idx: jax.Array, num_experts: int):

@@ -191,10 +191,17 @@ def init_caches(cfg, batch: int, max_len: int, plan: ShardingPlan | None = None)
 
 def _apply_block(
     kind, p, x, cfg, plan, mesh, mode, cache, t, enc_out, expert_perm, positions,
-    act_spec=None, wire_perm=None,
+    act_spec=None, wire_perm=None, gate_weights=None,
 ):
     new_cache = dict(cache) if cache is not None else ({} if mode != "train" else None)
     stats = None
+    # Decode-time live mask: dead continuous-batching slots must not write
+    # K/V at their stale positions (a mid-chunked-prefill slot's cache would
+    # be stomped).  Derived from the same per-token weights the MoE gate
+    # telemetry uses (DESIGN.md §9).
+    write_mask = None
+    if mode == "decode" and gate_weights is not None:
+        write_mask = gate_weights[:, 0] > 0
 
     def seq_shard(y):
         # Constrain each sublayer output to the sequence-parallel spec BEFORE
@@ -211,11 +218,13 @@ def _apply_block(
             y, ac = L.mla_attention_apply(
                 p["attn"], h, cfg, mode=mode, cache=attn_cache, t=t,
                 positions=positions, plan=plan, mesh=mesh,
+                write_mask=write_mask,
             )
         else:
             y, ac = L.attention_apply(
                 p["attn"], h, cfg, kind=kind, mode=mode, cache=attn_cache, t=t,
                 positions=positions, plan=plan, mesh=mesh,
+                write_mask=write_mask,
             )
         x = x + seq_shard(y)
         if ac is not None:
@@ -230,7 +239,7 @@ def _apply_block(
         if cfg.is_moe:
             y, stats = moe_mod.moe_apply(
                 p["moe"], h2, cfg, plan, mesh=mesh, expert_perm=expert_perm,
-                wire_perm=wire_perm, mode=mode,
+                wire_perm=wire_perm, mode=mode, gate_weights=gate_weights,
             )
         elif cfg.sp_shardmap and L.can_use_sp_mlp(p["mlp"], h2, cfg, plan, mesh, mode):
             y = L.mlp_apply_sp(p["mlp"], h2, cfg, plan, mesh)
@@ -343,6 +352,7 @@ def model_apply(
     t=None,
     expert_perm=None,
     wire_perm=None,
+    gate_weights=None,
 ):
     """Run the model.
 
@@ -351,6 +361,8 @@ def model_apply(
     ``expert_perm``: [repeats, E_virtual] per-layer expert->slot maps;
     ``wire_perm``: optional [repeats, P] per-layer device maps for plans the
     control plane installed as wire re-addresses instead of weight gathers.
+    ``gate_weights``: optional [B, S] per-token weight for the exported MoE
+    gate-load telemetry (the serving engine's live-slot mask, DESIGN.md §9).
     Returns (features [B,S,D], aux, new_caches).  Use
     :func:`chunked_cross_entropy` / :func:`logits` on the features.
     """
@@ -471,6 +483,7 @@ def model_apply(
             x, nc, st = _apply_block(
                 kind, gp, x, cfg, plan, mesh, mode, cache_i, t,
                 enc_out, perm, positions, act_spec=_act_spec, wire_perm=wire,
+                gate_weights=gate_weights,
             )
             x = constrain(x, mesh, _act_spec)
             if new_caches is not None:
@@ -550,6 +563,7 @@ def model_apply(
                 enc_out, perm_stack[0] if perm_stack is not None else None, positions,
                 act_spec=_act_spec,
                 wire_perm=wire_perm[0] if wire_perm is not None else None,
+                gate_weights=gate_weights,
             )
             if new_tail is not None:
                 new_tail[name] = nc if nc is not None else cache_i

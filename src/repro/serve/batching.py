@@ -1,11 +1,34 @@
 """Continuous batching: a fixed-slot decode batch where every slot runs at
 its own position, finished sequences are evicted between steps and queued
 prompts are admitted into the freed slots (vLLM-style scheduling on static
-shapes — slot caches are scattered in, never reshaped).
+shapes — slot caches are scattered in place, never reshaped).
 
 Decode attention supports per-slot ``t`` vectors natively
 (:mod:`repro.models.layers`), so one jitted ``serve_step`` serves the whole
-heterogeneous batch.
+heterogeneous batch.  Two admission paths (DESIGN.md §9):
+
+* **whole-prompt prefill** (default) — the prompt runs through a batch-1
+  prefill and the resulting caches scatter into the freed slot;
+* **chunked prefill** (``prefill_chunk > 0``) — the prompt streams through
+  the decode tick loop ``prefill_chunk`` tokens at a time
+  (:func:`repro.train.train_step.make_prefill_chunk_step`), so a long prompt
+  never stalls the live decode slots behind one monolithic prefill — the
+  chunk rides the same tick the decode step does, which is also what lets
+  the netsim serving scenario hide the tick's all-to-all under the combined
+  decode + prefill compute window.
+
+Slot lifecycle hardening (regression-tested in ``tests/test_batching.py``):
+prompts longer than the slot cache are rejected at admission (``req.error``)
+instead of corrupting the ring buffer; a prompt that exactly fills the cache
+emits its prefill token and finishes (no decode room); EOS on the final
+allowed token finishes the request exactly like an early EOS; and an evicted
+slot's dirty cache may be re-admitted into without clearing — every decode
+read is masked to ``pos <= t``, so stale tail entries are never attended.
+
+The serving engine (:mod:`repro.serve.engine`) threads runtime placement
+state through the ``expert_perm`` / ``wire_perm`` attributes and reads
+per-tick gate loads from :class:`TickStats` — the decode-time control-plane
+contract.
 """
 
 from __future__ import annotations
@@ -18,9 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tfm
-from repro.train.train_step import make_serve_step
+from repro.train.train_step import (
+    make_prefill_chunk_step,
+    make_prefill_step,
+    make_serve_step,
+)
 
-__all__ = ["ContinuousBatcher", "Request"]
+__all__ = ["ContinuousBatcher", "Request", "TickStats"]
 
 
 @dataclasses.dataclass
@@ -30,91 +57,269 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int | None = None
     out: list = dataclasses.field(default_factory=list)
+    error: str | None = None
+    submit_tick: int = -1  # tick the request entered the queue
+    first_token_tick: int = -1  # tick its first output token was emitted
+    finish_tick: int = -1
+
+
+@dataclasses.dataclass
+class _Prefill:
+    """Chunked-prefill progress of one admitted-but-not-yet-live request."""
+
+    req: Request
+    slot: int
+    pos: int = 0
+
+
+@dataclasses.dataclass
+class TickStats:
+    """What one tick did — the serving engine's observation surface."""
+
+    live: int  # decode slots served
+    prefill_tokens: int  # chunked-prefill tokens advanced this tick
+    admitted: int
+    finished: int
+    gate_load: np.ndarray | None  # [repeats, E] live-slot expert loads
 
 
 class ContinuousBatcher:
     """Slot-based continuous batching over a jitted decode step."""
 
-    def __init__(self, params, cfg, plan, *, slots: int = 4, max_len: int = 128,
-                 mesh=None):
+    def __init__(
+        self,
+        params,
+        cfg,
+        plan,
+        *,
+        slots: int = 4,
+        max_len: int = 128,
+        mesh=None,
+        prefill_chunk: int = 0,
+        sample: bool = False,
+    ):
         self.params = params
         self.cfg = cfg
         self.plan = plan
+        self.mesh = mesh
         self.slots = slots
         self.max_len = max_len
+        self.prefill_chunk = int(prefill_chunk)
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
         self.t = np.zeros(slots, np.int32)  # next write position per slot
         self.tokens = np.zeros((slots, 1), np.int32)
         self.caches = tfm.init_caches(cfg, slots, max_len)
-        self._step = jax.jit(make_serve_step(cfg, plan, mesh=mesh))
+        self._step = jax.jit(
+            make_serve_step(cfg, plan, mesh=mesh, sample=sample, with_stats=True)
+        )
+        self._prefill_fn = jax.jit(
+            make_prefill_step(cfg, plan, mesh=mesh, with_stats=True)
+        )
+        self._chunk_fn = (
+            jax.jit(make_prefill_chunk_step(cfg, plan, mesh=mesh, with_stats=True))
+            if self.prefill_chunk > 0
+            else None
+        )
+        self.prefilling: deque[_Prefill] = deque()
         self.finished: list[Request] = []
+        self.tick = 0
+        # Runtime placement state, threaded by the serving engine (identity
+        # when no control plane drives this batcher).  Stored as numpy; the
+        # jitted steps receive them as traced values, so a reconfiguration
+        # never recompiles.
+        self.expert_perm: np.ndarray | None = None
+        self.wire_perm: np.ndarray | None = None
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        req.submit_tick = self.tick
         self.queue.append(req)
 
-    def _admit(self) -> None:
+    def _perm_args(self):
+        perm = (
+            jnp.asarray(self.expert_perm, jnp.int32)
+            if self.expert_perm is not None
+            else None
+        )
+        wire = (
+            jnp.asarray(self.wire_perm, jnp.int32)
+            if self.wire_perm is not None
+            else None
+        )
+        return perm, wire
+
+    def _finish(self, req: Request) -> None:
+        req.finish_tick = self.tick
+        self.finished.append(req)
+
+    def _emit_first(self, req: Request, first: int) -> bool:
+        """Record the prefill's next-token; True if the request is done."""
+        req.out.append(first)
+        req.first_token_tick = self.tick
+        prompt_full = len(req.prompt) + 1 > self.max_len
+        done = (
+            len(req.out) >= req.max_new_tokens
+            or (req.eos_id is not None and first == req.eos_id)
+            or prompt_full  # no cache room to decode further
+        )
+        if done:
+            self._finish(req)
+        return done
+
+    def _admit(self) -> tuple[int, np.ndarray | None]:
+        admitted = 0
+        load = None
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
+            if any(p.slot == slot for p in self.prefilling):
+                continue  # slot reserved by an in-flight chunked prefill
             req = self.queue.popleft()
-            # Per-slot prefill: run the prompt through a batch-1 prefill,
-            # emit the prefill's next-token (the request's first output) and
-            # scatter the resulting caches into this slot.
-            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-            feats, _, one = tfm.model_apply(
-                self.params, batch, self.cfg, self.plan, mode="prefill"
-            )
-            logits = tfm.logits_from_features(self.params, feats[:, -1:], self.cfg)
-            first = int(jnp.argmax(logits, axis=-1)[0, 0])
-            one = tfm.pad_caches(one, self.max_len)
-
-            def scatter(full, new):
-                # full: [reps, slots, ...]; new: [reps, 1, ...]
-                return full.at[:, slot].set(new[:, 0].astype(full.dtype))
-
-            self.caches = jax.tree.map(scatter, self.caches, one)
-            req.out.append(first)
-            if len(req.out) >= req.max_new_tokens or (
-                req.eos_id is not None and first == req.eos_id
-            ):
-                self.finished.append(req)
+            if len(req.prompt) > self.max_len:
+                # Reject instead of writing past the ring buffer: a prompt
+                # longer than the cache would wrap and overwrite itself.
+                req.error = "prompt_too_long"
+                self._finish(req)
                 continue
-            self.active[slot] = req
-            self.t[slot] = len(req.prompt)
-            self.tokens[slot, 0] = first
+            admitted += 1
+            if self._chunk_fn is not None:
+                # Chunked prefill: reserve the slot, stream the prompt
+                # through the tick loop (see _advance_prefill).
+                self.prefilling.append(_Prefill(req, slot))
+                continue
+            load = self._admit_whole(req, slot, load)
+        return admitted, load
+
+    def _admit_whole(self, req: Request, slot: int, load):
+        """Per-slot prefill: run the prompt through a batch-1 prefill, emit
+        the prefill's next-token (the request's first output) and scatter the
+        resulting caches into this slot."""
+        perm, wire = self._perm_args()
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        next_tok, one, stats = self._prefill_fn(self.params, batch, perm, wire)
+        first = int(next_tok[0, 0])
+        one = tfm.pad_caches(one, self.max_len)
+
+        def scatter(full, new):
+            # full: [reps, slots, ...]; new: [reps, 1, ...]
+            return full.at[:, slot].set(new[:, 0].astype(full.dtype))
+
+        self.caches = jax.tree.map(scatter, self.caches, one)
+        if stats is not None:
+            s = np.asarray(stats)
+            load = s if load is None else load + s
+        if self._emit_first(req, first):
+            return load
+        self.active[slot] = req
+        self.t[slot] = len(req.prompt)
+        self.tokens[slot, 0] = first
+        return load
+
+    def _slot_caches(self, slot: int):
+        return jax.tree.map(lambda c: c[:, slot : slot + 1], self.caches)
+
+    def _scatter_slot(self, slot: int, new) -> None:
+        self.caches = jax.tree.map(
+            lambda full, n: full.at[:, slot].set(n[:, 0].astype(full.dtype)),
+            self.caches,
+            new,
+        )
+
+    def _advance_prefill(self) -> tuple[int, np.ndarray | None]:
+        """Advance ONE pending prompt by up to ``prefill_chunk`` tokens —
+        the chunk rides the same tick the decode step does."""
+        if not self.prefilling:
+            return 0, None
+        pf = self.prefilling[0]
+        perm, wire = self._perm_args()
+        chunk = pf.req.prompt[pf.pos : pf.pos + self.prefill_chunk]
+        next_tok, new, stats = self._chunk_fn(
+            self.params,
+            self._slot_caches(pf.slot),
+            jnp.asarray(chunk[None, :]),
+            jnp.asarray(pf.pos, jnp.int32),
+            perm,
+            wire,
+        )
+        self._scatter_slot(pf.slot, new)
+        pf.pos += len(chunk)
+        load = None if stats is None else np.asarray(stats)
+        if pf.pos >= len(pf.req.prompt):
+            self.prefilling.popleft()
+            first = int(next_tok[0, 0])
+            if not self._emit_first(pf.req, first):
+                self.active[pf.slot] = pf.req
+                self.t[pf.slot] = len(pf.req.prompt)
+                self.tokens[pf.slot, 0] = first
+        return len(chunk), load
 
     # -- one decode tick -------------------------------------------------------
-    def step(self) -> int:
-        """Admit, decode one token for every active slot, evict finished.
-        Returns the number of active slots served."""
-        self._admit()
+    def step(self) -> TickStats:
+        """Admit, advance one prefill chunk, decode one token for every
+        active slot, evict finished.  Returns the tick's observations."""
+        admitted, pre_load = self._admit()
+        prefill_tokens, chunk_load = self._advance_prefill()
         live = [s for s in range(self.slots) if self.active[s] is not None]
-        if not live:
-            return 0
-        next_tok, self.caches = self._step(
-            self.params, self.caches, jnp.asarray(self.tokens),
-            jnp.asarray(self.t),
+        finished = 0
+        gate_load = None
+        if live:
+            perm, wire = self._perm_args()
+            live_mask = np.zeros((self.slots, 1), np.float32)
+            live_mask[live] = 1.0
+            # The live mask serves two jobs (DESIGN.md §9): it weights the
+            # exported MoE gate telemetry, and it suppresses K/V writes for
+            # dead slots — without it the decode step would stomp a stale
+            # position of a slot that is empty or still mid-chunked-prefill.
+            next_tok, self.caches, stats = self._step(
+                self.params,
+                self.caches,
+                jnp.asarray(self.tokens),
+                jnp.asarray(self.t),
+                None,
+                perm,
+                wire,
+                jnp.asarray(live_mask),
+            )
+            if stats is not None:
+                gate_load = np.asarray(stats)
+            next_np = np.asarray(next_tok)
+            for s in live:
+                req = self.active[s]
+                tok = int(next_np[s, 0])
+                req.out.append(tok)
+                self.t[s] += 1
+                self.tokens[s, 0] = tok
+                done = (
+                    len(req.out) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or self.t[s] >= self.max_len
+                )
+                if done:
+                    finished += 1
+                    self._finish(req)
+                    self.active[s] = None
+        for extra in (pre_load, chunk_load):
+            if extra is not None:
+                gate_load = extra if gate_load is None else gate_load + extra
+        self.tick += 1
+        return TickStats(
+            live=len(live),
+            prefill_tokens=prefill_tokens,
+            admitted=admitted,
+            finished=finished,
+            gate_load=gate_load,
         )
-        next_np = np.asarray(next_tok)
-        for s in live:
-            req = self.active[s]
-            tok = int(next_np[s, 0])
-            req.out.append(tok)
-            self.t[s] += 1
-            self.tokens[s, 0] = tok
-            done = len(req.out) >= req.max_new_tokens or (
-                req.eos_id is not None and tok == req.eos_id
-            ) or self.t[s] >= self.max_len
-            if done:
-                self.finished.append(req)
-                self.active[s] = None
-        return len(live)
+
+    @property
+    def busy(self) -> bool:
+        return bool(
+            self.queue or self.prefilling or any(a is not None for a in self.active)
+        )
 
     def run(self, max_ticks: int = 1000) -> list[Request]:
         for _ in range(max_ticks):
-            if not self.queue and all(a is None for a in self.active):
+            if not self.busy:
                 break
             self.step()
         return self.finished

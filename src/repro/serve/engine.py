@@ -1,0 +1,331 @@
+"""ServeEngine — the reconfigurable expert-parallel serving engine
+(DESIGN.md §9).
+
+Owns the request lifecycle end to end:
+
+    workload (repro.serve.workload) -> admission -> chunked prefill
+    interleaved into decode ticks (repro.serve.batching) -> EP-sharded
+    decode -> per-tick gate-load observation -> ControlPlane.observe /
+    end_step -> placement plans applied BETWEEN ticks (weight permutation,
+    or wire re-address for whole-device-block plans) -> checkpoint.
+
+This is the serving half of the paper's runtime-reconfiguration story: the
+decode-time expert load is skewed and drifts with the request mix (§3's
+locality, which the workload generator's regional skew reproduces), so the
+same monitor -> solve -> actuate loop the trainer runs
+(:class:`repro.core.controlplane.ControlPlane` +
+:class:`~repro.core.controlplane.PlacementApplier`) migrates hot experts
+toward the regions generating their traffic while the server keeps serving.
+
+**Generation-consistency guarantee**: with identical seeds and request
+streams, the generated tokens are bit-identical with reconfiguration on and
+off.  A placement plan moves expert *weights* (or wire addresses) and
+re-addresses the router through ``expert_perm`` in the same transaction —
+and every decode-path combine sums choices in gate order, never slot order
+(:mod:`repro.models.moe`), so no float association moves with the
+permutation.  The parity sweep in ``tests/test_serve.py`` asserts this for
+P ∈ {1,2,4,8} × dropless/capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import commruntime as comm
+from repro.core.controlplane import ControlPlane, LayerPlan, PlacementApplier
+from repro.parallel.sharding import ShardingPlan, virtual_experts
+from repro.serve.batching import ContinuousBatcher, Request, TickStats
+from repro.serve.workload import SyntheticRequest, WorkloadGenerator
+from repro.train import checkpoint as ckpt
+
+__all__ = ["ServeConfig", "ServeReport", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    slots: int = 4
+    max_len: int = 128
+    # Chunked prefill budget per tick (tokens); 0 = whole-prompt prefill at
+    # admission (the pre-engine behaviour).
+    prefill_chunk: int = 0
+    # Virtual seconds one tick represents — maps workload arrival times onto
+    # the tick clock deterministically (parity runs replay identically).
+    tick_s: float = 0.05
+    # Decode-time reconfiguration: every N ticks the engine asks the control
+    # plane for per-layer placement plans and applies them between ticks.
+    # 0 disables the control loop entirely.
+    reconfig_every: int = 0
+    reconfig_min_gain: float = 0.0
+    # Control-plane device space (expert slots per device = Ev / num_devices).
+    # 0 = the sharding plan's model-axis size.  A logical region larger than
+    # the physical axis is legal — placement-mode perms are pure router/weight
+    # re-addressing (DESIGN.md §2).
+    num_devices: int = 0
+    use_copilot: bool = False
+    sample: bool = False
+    max_ticks: int = 10_000
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """End-of-run serving metrics (ticks are the deterministic clock; wall
+    seconds measure this host's actual throughput)."""
+
+    requests: int
+    completed: int
+    rejected: int
+    ticks: int
+    tokens_out: int
+    wall_s: float
+    tokens_per_s: float
+    ttft_ticks_p50: float
+    ttft_ticks_p99: float
+    ttft_s_p50: float  # virtual (tick_s-scaled) TTFT
+    ttft_s_p99: float
+    tpot_ticks_mean: float
+    reconfig_count: int
+    wire_reconfig_count: int
+    # Decode-path EP all-to-all payload bytes, accounted through the SAME
+    # CommRuntime formula netsim prices (ep_alltoall_bytes) — the serving
+    # cross-check in tests/test_serve.py.
+    a2a_bytes: float
+    gate_load_total: np.ndarray | None
+
+
+class ServeEngine:
+    """Reconfigurable EP serving engine over a :class:`ContinuousBatcher`."""
+
+    def __init__(
+        self,
+        params,
+        cfg,
+        plan: ShardingPlan,
+        scfg: ServeConfig | None = None,
+        *,
+        mesh=None,
+    ):
+        self.cfg = cfg
+        self.plan = plan
+        self.scfg = scfg or ServeConfig()
+        s = self.scfg
+        self.batcher = ContinuousBatcher(
+            params, cfg, plan, slots=s.slots, max_len=s.max_len, mesh=mesh,
+            prefill_chunk=s.prefill_chunk, sample=s.sample,
+        )
+        self.controlplane: ControlPlane | None = None
+        self.applier: PlacementApplier | None = None
+        if cfg.is_moe and s.reconfig_every:
+            ev, r = virtual_experts(cfg.moe.num_experts, plan.model_size)
+            ndev = s.num_devices or max(plan.model_size, 1)
+            self.controlplane = ControlPlane(
+                num_layers=cfg.pattern_repeats,
+                num_experts=cfg.moe.num_experts,
+                num_devices=ndev,
+                replication=r,
+                min_gain_fraction=s.reconfig_min_gain,
+                use_copilot=s.use_copilot,
+            )
+            # Wire re-addressing is only realizable when the decode path
+            # actually runs the mixnet a2a (sparse decode on a model axis).
+            self.applier = PlacementApplier(
+                self.controlplane,
+                model_size=max(plan.model_size, 1),
+                wire_capable=(
+                    cfg.moe.backend == "mixnet"
+                    and cfg.moe.decode_backend == "sparse"
+                ),
+            )
+            self.batcher.expert_perm = self.controlplane.perm_stack()
+        # Per-tick decode a2a payload accounting (one EP a2a phase per MoE
+        # layer per tick), through the CommRuntime byte formula.
+        self._moe_layers = (
+            cfg.pattern_repeats
+            * sum(1 for k in cfg.block_pattern if k in ("global", "local"))
+            if cfg.is_moe
+            else 0
+        )
+        self._dtype_bytes = np.dtype(cfg.dtype).itemsize
+        self.a2a_bytes = 0.0
+        self.gate_load_total: np.ndarray | None = None
+        self.tick_log: list[TickStats] = []
+
+    # -- request intake -------------------------------------------------------
+    @property
+    def params(self):
+        return self.batcher.params
+
+    @property
+    def tick(self) -> int:
+        return self.batcher.tick
+
+    def submit(self, req: Request) -> None:
+        self.batcher.submit(req)
+
+    # -- the decode-time control loop ----------------------------------------
+    def _observe(self, stats: TickStats) -> None:
+        if stats.gate_load is None:
+            return
+        load = np.asarray(stats.gate_load, dtype=np.float64)
+        self.gate_load_total = (
+            load if self.gate_load_total is None else self.gate_load_total + load
+        )
+        if self.controlplane is not None:
+            for layer in range(load.shape[0]):
+                self.controlplane.observe(layer, load[layer])
+            self.controlplane.end_step()
+
+    def apply_plans(self, plans: list[LayerPlan]) -> bool:
+        """Actuate placement plans BETWEEN ticks: expert weights are gathered
+        into their new slots (or wire-re-addressed for whole-device-block
+        plans) and the router's perm stack updates in the same transaction —
+        in-flight slot caches are position-addressed, so live requests
+        continue bit-identically (the §9 consistency guarantee)."""
+        if self.applier is None:
+            raise RuntimeError("no control plane configured (reconfig_every=0?)")
+        params, changed = self.applier.apply(self.batcher.params, plans)
+        if changed:
+            self.batcher.params = params
+            self.batcher.expert_perm = self.controlplane.perm_stack()
+            self.batcher.wire_perm = self.applier.wire_perm
+        return changed
+
+    def _maybe_reconfigure(self) -> None:
+        cp = self.controlplane
+        if cp is None or self.tick == 0 or self.tick % self.scfg.reconfig_every:
+            return
+        self.apply_plans([cp.plan(layer) for layer in range(cp.num_layers)])
+
+    def step(self) -> TickStats:
+        """One engine tick: decode + interleaved prefill chunk, stream the
+        realized gate loads into the control plane, and (on cadence) apply
+        placement plans before the next tick."""
+        stats = self.batcher.step()
+        served = stats.live + stats.prefill_tokens
+        if served and self._moe_layers:
+            self.a2a_bytes += self._moe_layers * comm.ep_alltoall_bytes(
+                served, self.cfg.moe.top_k, self.cfg.d_model, self._dtype_bytes
+            )
+        self._observe(stats)
+        self._maybe_reconfigure()
+        self.tick_log.append(stats)
+        return stats
+
+    # -- driving a workload ---------------------------------------------------
+    def run(
+        self,
+        requests: list[SyntheticRequest] | None = None,
+        generator: WorkloadGenerator | None = None,
+        *,
+        eos_id: int | None = None,
+        drain: bool = True,
+    ) -> ServeReport:
+        """Serve a workload to completion.
+
+        ``requests`` (from ``generator.generate``) are admitted when the
+        tick clock passes their arrival time; with ``drain`` the engine runs
+        until every request completes (or ``max_ticks``)."""
+        t0 = time.perf_counter()
+        pending = sorted(requests or [], key=lambda r: r.arrival_s)
+        cursor = 0
+        while self.tick < self.scfg.max_ticks:
+            now_s = self.tick * self.scfg.tick_s
+            while cursor < len(pending) and pending[cursor].arrival_s <= now_s:
+                sr = pending[cursor]
+                self.submit(Request(
+                    rid=sr.rid,
+                    prompt=generator.prompt_tokens(sr),
+                    max_new_tokens=sr.max_new_tokens,
+                    eos_id=eos_id,
+                ))
+                cursor += 1
+            if cursor >= len(pending) and not self.batcher.busy:
+                break
+            if not self.batcher.busy and cursor < len(pending):
+                # Idle gap before the next arrival: jump the clock straight
+                # to the arrival tick (mirrors netsim's clock jump) instead
+                # of burning max_ticks on empty ticks.
+                import math
+
+                nxt = math.ceil(pending[cursor].arrival_s / self.scfg.tick_s)
+                self.batcher.tick = max(self.tick + 1, nxt)
+                continue
+            self.step()
+            if not drain and cursor >= len(pending):
+                break
+        return self.report(time.perf_counter() - t0)
+
+    def report(self, wall_s: float) -> ServeReport:
+        done = self.batcher.finished
+        ok = [r for r in done if r.error is None]
+        ttft = np.array(
+            [r.first_token_tick - r.submit_tick for r in ok if r.first_token_tick >= 0],
+            dtype=np.float64,
+        )
+        tpot = np.array(
+            [
+                (r.finish_tick - r.first_token_tick) / max(len(r.out) - 1, 1)
+                for r in ok
+                if len(r.out) > 1 and r.finish_tick >= 0
+            ],
+            dtype=np.float64,
+        )
+        tokens_out = sum(len(r.out) for r in ok)
+        pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
+        ts = self.scfg.tick_s
+        return ServeReport(
+            requests=len(done),
+            completed=len(ok),
+            rejected=len(done) - len(ok),
+            ticks=self.tick,
+            tokens_out=tokens_out,
+            wall_s=wall_s,
+            tokens_per_s=tokens_out / max(wall_s, 1e-9),
+            ttft_ticks_p50=pct(ttft, 50),
+            ttft_ticks_p99=pct(ttft, 99),
+            ttft_s_p50=pct(ttft, 50) * ts,
+            ttft_s_p99=pct(ttft, 99) * ts,
+            tpot_ticks_mean=float(tpot.mean()) if len(tpot) else 0.0,
+            reconfig_count=(
+                self.controlplane.reconfig_count if self.controlplane else 0
+            ),
+            wire_reconfig_count=(
+                self.applier.wire_reconfig_count if self.applier else 0
+            ),
+            a2a_bytes=self.a2a_bytes,
+            gate_load_total=self.gate_load_total,
+        )
+
+    # -- checkpoint round-trip (DESIGN.md §9) ---------------------------------
+    def save_checkpoint(self, ckpt_dir: str, step: int | None = None) -> int:
+        """Persist params WITH the placement state: the perm stack composes
+        against the physically permuted weights, so restoring one without
+        the other would misroute every token."""
+        step = self.tick if step is None else step
+        extra = {
+            "placement": self.applier.state_dict() if self.applier else None,
+            "serve": {"tick": self.tick},
+        }
+        ckpt.save(ckpt_dir, step, {"params": self.batcher.params}, extra=extra)
+        return step
+
+    def restore_checkpoint(self, ckpt_dir: str, step: int | None = None) -> int:
+        step = ckpt.latest_step(ckpt_dir) if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        state = ckpt.restore(ckpt_dir, step, {"params": self.batcher.params})
+        self.batcher.params = state["params"]
+        extra = ckpt.load_extra(ckpt_dir, step)
+        placement = extra.get("placement")
+        if placement is not None:
+            if self.applier is None:
+                raise RuntimeError(
+                    "checkpoint carries placement state but this engine has "
+                    "no control plane (set reconfig_every > 0)"
+                )
+            self.applier.load_state_dict(placement)
+            self.batcher.expert_perm = self.controlplane.perm_stack()
+            self.batcher.wire_perm = self.applier.wire_perm
+        return step

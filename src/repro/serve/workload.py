@@ -1,0 +1,169 @@
+"""Synthetic serving workloads (DESIGN.md §9).
+
+One generator feeds BOTH serving consumers: the real engine
+(:mod:`repro.serve.engine`, which materializes prompt tokens and drives the
+jitted tick loop) and the flow-level simulator
+(:func:`repro.core.netsim.simulate_serving`, which only needs arrival times,
+lengths and regions) — so the priced scenario and the executed one see the
+same traffic, the same way netsim and the trainer share the CommRuntime's
+byte accounting.
+
+A :class:`TrafficMix` describes one request population:
+
+* **arrivals** — Poisson (independent exponential gaps) or bursty (a two
+  state on/off modulated Poisson process, the production "thundering herd"
+  shape);
+* **lengths** — prompt and output lengths drawn from bounded Zipf
+  (power-law) distributions, the documented long-tail of production traces
+  (most requests short, a heavy tail of huge prompts / long generations);
+* **regions** — each request originates in one of ``num_regions`` traffic
+  regions with Zipf-skewed popularity.  Regional origin is what makes
+  decode-time gate load *regionally* skewed — the locality a reconfigurable
+  fabric exploits (paper §3) — and drives the per-region demand matrices of
+  the netsim serving scenario.
+
+Everything is deterministic in ``seed``: the engine's generation-parity
+tests replay the identical request stream with reconfiguration on and off.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["TrafficMix", "MIXES", "SyntheticRequest", "WorkloadGenerator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMix:
+    """One named request population (arrival process + length laws)."""
+
+    name: str
+    rate_rps: float  # mean arrival rate (requests / second)
+    arrival: str = "poisson"  # "poisson" | "bursty"
+    burst_factor: float = 4.0  # on-state rate multiplier (bursty only)
+    burst_on_s: float = 2.0  # mean on-period length (seconds)
+    burst_off_s: float = 6.0  # mean off-period length (seconds)
+    prompt_min: int = 8
+    prompt_max: int = 128
+    prompt_zipf_a: float = 1.2  # power-law exponent over [min, max]
+    out_min: int = 4
+    out_max: int = 64
+    out_zipf_a: float = 1.1
+    num_regions: int = 4
+    region_zipf_a: float = 0.8  # request-origin skew across regions
+
+
+# Named mixes the examples/benchmarks reference.  The shapes follow the
+# production archetypes: chat = short prompts / medium outputs at steady
+# Poisson rate; batch_summarize = long prompts / short outputs arriving in
+# bursts (cron-fired document batches); agentic = medium prompts with LONG
+# tool-call transcripts and bursty self-loops.
+MIXES: dict[str, TrafficMix] = {
+    "chat": TrafficMix(
+        "chat", rate_rps=8.0, arrival="poisson",
+        prompt_min=8, prompt_max=96, prompt_zipf_a=1.4,
+        out_min=8, out_max=64, out_zipf_a=1.2,
+    ),
+    "batch_summarize": TrafficMix(
+        "batch_summarize", rate_rps=4.0, arrival="bursty", burst_factor=6.0,
+        prompt_min=64, prompt_max=512, prompt_zipf_a=0.8,
+        out_min=4, out_max=24, out_zipf_a=1.5,
+    ),
+    "agentic": TrafficMix(
+        "agentic", rate_rps=6.0, arrival="bursty", burst_factor=3.0,
+        prompt_min=16, prompt_max=256, prompt_zipf_a=1.0,
+        out_min=16, out_max=128, out_zipf_a=0.9,
+        num_regions=4, region_zipf_a=1.2,
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticRequest:
+    """One generated request (framework-free: netsim consumes it as-is)."""
+
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    max_new_tokens: int
+    region: int
+
+
+def _bounded_zipf(rng: np.random.Generator, a: float, lo: int, hi: int, n: int):
+    """Discrete power-law sample over [lo, hi]: p(k) ∝ (k - lo + 1)^-a."""
+    support = np.arange(lo, hi + 1)
+    p = (support - lo + 1.0) ** -a
+    p /= p.sum()
+    return rng.choice(support, size=n, p=p)
+
+
+class WorkloadGenerator:
+    """Deterministic request-stream generator for one :class:`TrafficMix`."""
+
+    def __init__(self, mix: TrafficMix | str, *, seed: int = 0, vocab_size: int = 256):
+        self.mix = MIXES[mix] if isinstance(mix, str) else mix
+        self.seed = seed
+        self.vocab_size = vocab_size
+
+    def generate(self, num_requests: int) -> list[SyntheticRequest]:
+        m = self.mix
+        rng = np.random.default_rng(self.seed)
+        # -- arrival process --------------------------------------------------
+        if m.arrival == "poisson":
+            gaps = rng.exponential(1.0 / m.rate_rps, size=num_requests)
+            arrivals = np.cumsum(gaps)
+        elif m.arrival == "bursty":
+            # Two-state MMPP: on-periods run at rate*burst_factor, off-periods
+            # at a trickle; state dwell times are exponential.
+            arrivals = np.empty(num_requests)
+            t, state, state_left = 0.0, 1, rng.exponential(m.burst_on_s)
+            for i in range(num_requests):
+                rate = m.rate_rps * (m.burst_factor if state else 0.2)
+                gap = rng.exponential(1.0 / rate)
+                while gap > state_left:
+                    t += state_left
+                    gap = (gap - state_left) * (
+                        (m.burst_factor if state else 0.2)
+                        / (0.2 if state else m.burst_factor)
+                    )
+                    state = 1 - state
+                    state_left = rng.exponential(
+                        m.burst_on_s if state else m.burst_off_s
+                    )
+                t += gap
+                state_left -= gap
+                arrivals[i] = t
+        else:
+            raise ValueError(f"unknown arrival process {m.arrival!r}")
+        # -- lengths + regions ------------------------------------------------
+        plens = _bounded_zipf(rng, m.prompt_zipf_a, m.prompt_min, m.prompt_max,
+                              num_requests)
+        olens = _bounded_zipf(rng, m.out_zipf_a, m.out_min, m.out_max,
+                              num_requests)
+        rp = (np.arange(1, m.num_regions + 1) ** -m.region_zipf_a).astype(float)
+        rp /= rp.sum()
+        regions = rng.choice(m.num_regions, size=num_requests, p=rp)
+        return [
+            SyntheticRequest(
+                rid=i,
+                arrival_s=float(arrivals[i]),
+                prompt_len=int(plens[i]),
+                max_new_tokens=int(olens[i]),
+                region=int(regions[i]),
+            )
+            for i in range(num_requests)
+        ]
+
+    def prompt_tokens(self, req: SyntheticRequest) -> np.ndarray:
+        """Materialize the request's prompt (deterministic in (seed, rid)).
+
+        The leading token encodes the region so requests from the same region
+        share a prefix — the correlation that concentrates gate load
+        per-region (paper §3's semantic locality, at toy scale).
+        """
+        rng = np.random.default_rng((self.seed << 20) ^ req.rid)
+        toks = rng.integers(0, self.vocab_size, size=req.prompt_len)
+        toks[0] = req.region % self.vocab_size
+        return toks.astype(np.int32)

@@ -22,7 +22,14 @@ import threading
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+__all__ = [
+    "save",
+    "save_async",
+    "restore",
+    "load_extra",
+    "latest_step",
+    "wait_pending",
+]
 
 _SEP = "/"
 _pending: list[threading.Thread] = []
@@ -129,6 +136,20 @@ def latest_step(ckpt_dir: str) -> int | None:
         if d.startswith("step_") and not d.endswith(".tmp")
     ]
     return max(steps) if steps else None
+
+
+def load_extra(ckpt_dir: str, step: int) -> dict:
+    """The ``extra`` dict a checkpoint was saved with (empty if none).
+
+    This is where non-array runtime state rides — notably the ControlPlane
+    placement state (perm stack + wire perms, DESIGN.md §9): a server
+    restored with permuted expert weights but a fresh perm stack would
+    misroute every token, so the two must round-trip together.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    return manifest.get("extra") or {}
 
 
 def restore(ckpt_dir: str, step: int, skeleton, *, shardings=None):

@@ -35,6 +35,7 @@ from repro.parallel.sharding import ShardingPlan, constrain, shard_map
 __all__ = [
     "make_train_step",
     "make_prefill_step",
+    "make_prefill_chunk_step",
     "make_serve_step",
     "init_ef_residual",
     "loss_fn",
@@ -272,31 +273,93 @@ def make_train_step(
     return train_step
 
 
-def make_prefill_step(cfg, plan: ShardingPlan, mesh=None):
-    def prefill_step(params, batch):
-        feats, _, caches = tfm.model_apply(
-            params, batch, cfg, plan, mesh=mesh, mode="prefill"
+def make_prefill_step(cfg, plan: ShardingPlan, mesh=None, *, with_stats: bool = False):
+    """``expert_perm``/``wire_perm`` thread the serving engine's runtime
+    placement state into prefill (DESIGN.md §9); ``with_stats`` additionally
+    returns the per-layer gate-load telemetry the control plane observes."""
+
+    def prefill_step(params, batch, expert_perm=None, wire_perm=None):
+        feats, aux, caches = tfm.model_apply(
+            params, batch, cfg, plan, mesh=mesh, mode="prefill",
+            expert_perm=expert_perm, wire_perm=wire_perm,
         )
         logits = tfm.logits_from_features(params, feats[:, -1:], cfg)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if with_stats:
+            return next_tok, caches, aux.moe_stats
         return next_tok, caches
 
     return prefill_step
 
 
-def make_serve_step(cfg, plan: ShardingPlan, mesh=None, *, sample: bool = False):
-    def serve_step(params, caches, tokens, t, rng=None):
-        """One decode step: tokens [B,1] + caches -> next token [B,1]."""
-        feats, _, caches = tfm.model_apply(
+def make_prefill_chunk_step(cfg, plan: ShardingPlan, mesh=None, *, with_stats: bool = False):
+    """Chunked-prefill continuation step (DESIGN.md §9).
+
+    Runs a ``[B, C]`` slice of prompt tokens against EXISTING caches in
+    decode mode: attention writes positions ``t .. t+C-1`` and attends
+    causally over the cached prefix plus the chunk, so a long prompt streams
+    through the decode tick loop ``C`` tokens at a time instead of stalling
+    every live slot behind one monolithic prefill.  Returns the next-token
+    prediction after the chunk's last token (the request's first output when
+    the chunk completes the prompt) and the updated caches.
+
+    Only attention block kinds support the multi-token continuation; the
+    recurrent kinds (rglru/ssm) advance their state token-by-token.
+    """
+    bad = [
+        k for k in (*cfg.block_pattern, *cfg.tail_pattern)
+        if k not in ("global", "local")
+    ]
+    if bad:
+        raise ValueError(
+            f"chunked prefill needs attention-only block patterns, got {bad}"
+        )
+
+    def chunk_step(
+        params, caches, tokens, t, expert_perm=None, wire_perm=None,
+        gate_weights=None,
+    ):
+        feats, aux, caches = tfm.model_apply(
             params, {"tokens": tokens}, cfg, plan, mesh=mesh, mode="decode",
-            caches=caches, t=t,
+            caches=caches, t=t, expert_perm=expert_perm, wire_perm=wire_perm,
+            gate_weights=gate_weights,
+        )
+        logits = tfm.logits_from_features(params, feats[:, -1:], cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if with_stats:
+            return next_tok, caches, aux.moe_stats
+        return next_tok, caches
+
+    return chunk_step
+
+
+def make_serve_step(
+    cfg, plan: ShardingPlan, mesh=None, *, sample: bool = False,
+    with_stats: bool = False,
+):
+    def serve_step(
+        params, caches, tokens, t, rng=None, expert_perm=None, wire_perm=None,
+        gate_weights=None,
+    ):
+        """One decode step: tokens [B,1] + caches -> next token [B,1].
+
+        ``expert_perm``/``wire_perm`` are the runtime placement state the
+        serving engine threads per tick; ``gate_weights`` its live-slot mask
+        for the exported gate-load telemetry (``with_stats``)."""
+        feats, aux, caches = tfm.model_apply(
+            params, {"tokens": tokens}, cfg, plan, mesh=mesh, mode="decode",
+            caches=caches, t=t, expert_perm=expert_perm, wire_perm=wire_perm,
+            gate_weights=gate_weights,
         )
         logits = tfm.logits_from_features(params, feats, cfg)[:, -1]
         if sample and rng is not None:
             next_tok = jax.random.categorical(rng, logits.astype(jnp.float32))
         else:
             next_tok = jnp.argmax(logits, axis=-1)
-        return next_tok.astype(jnp.int32)[:, None], caches
+        next_tok = next_tok.astype(jnp.int32)[:, None]
+        if with_stats:
+            return next_tok, caches, aux.moe_stats
+        return next_tok, caches
 
     return serve_step
 

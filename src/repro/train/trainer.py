@@ -25,42 +25,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.commruntime import device_perm_from_slots
-from repro.core.controlplane import ControlPlane, LayerPlan
-from repro.core.placement import inverse_permutation
+from repro.core.controlplane import (
+    ControlPlane,
+    LayerPlan,
+    PlacementApplier,
+    permute_expert_weights,
+)
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import ShardingPlan, virtual_experts
 from repro.train import checkpoint as ckpt
 from repro.train.train_step import init_all, init_ef_residual, make_train_step
 
+# permute_expert_weights moved to repro.core.controlplane (it is shared with
+# the serving engine, DESIGN.md §9); re-exported here for API stability.
 __all__ = ["TrainerConfig", "Trainer", "permute_expert_weights"]
-
-
-def permute_expert_weights(params, inv_stack: np.ndarray, num_virtual: int):
-    """Gather every MoE block's stacked expert tensors into their new slots.
-
-    ``inv_stack`` is ``[L, E_virtual]`` of per-layer *inverse* permutations
-    (``inv[s]`` = the slot whose expert moves into slot ``s``); identity rows
-    leave a layer untouched.  Applied to every ``[L, E_virtual, ...]`` leaf
-    under ``params["blocks"][*]["moe"]`` — the weight-side half of a
-    reconfiguration, mirrored by the router-side ``perm_stack`` composition
-    in :class:`repro.core.controlplane.ControlPlane.apply`.
-    """
-    reps = inv_stack.shape[0]
-    rows = jnp.asarray(inv_stack)
-    gather_idx = (jnp.arange(reps)[:, None], rows)
-
-    def permute(leaf):
-        if leaf.ndim >= 2 and leaf.shape[0] == reps and leaf.shape[1] == num_virtual:
-            return leaf[gather_idx]
-        return leaf
-
-    for bparams in params["blocks"].values():
-        if "moe" in bparams:
-            for wname in ("w_in", "w_gate", "w_out"):
-                bparams["moe"][wname] = permute(bparams["moe"][wname])
-    return params
 
 
 @dataclasses.dataclass
@@ -122,11 +101,8 @@ class Trainer:
 
         # MixNet control plane (only meaningful for MoE archs).
         self.controlplane: ControlPlane | None = None
+        self._applier: PlacementApplier | None = None
         self.expert_perm = None
-        # Wire-level re-addressing state: [L, P] per-layer device maps for
-        # plans realized on the a2a wire instead of by weight gathers.
-        self.wire_perm: np.ndarray | None = None
-        self.wire_reconfig_count = 0
         if cfg.is_moe and tcfg.reconfig_every:
             ev, r = virtual_experts(cfg.moe.num_experts, plan.model_size)
             self.controlplane = ControlPlane(
@@ -136,8 +112,22 @@ class Trainer:
                 replication=r,
                 min_gain_fraction=tcfg.reconfig_min_gain,
             )
+            self._applier = PlacementApplier(
+                self.controlplane, model_size=max(plan.model_size, 1)
+            )
             self.expert_perm = self.controlplane.perm_stack()
         self.reconfig_count = 0
+
+    # Wire-level re-addressing state: [L, P] per-layer device maps for plans
+    # realized on the a2a wire instead of by weight gathers (lives on the
+    # shared PlacementApplier, DESIGN.md §3/§9).
+    @property
+    def wire_perm(self) -> np.ndarray | None:
+        return self._applier.wire_perm if self._applier is not None else None
+
+    @property
+    def wire_reconfig_count(self) -> int:
+        return self._applier.wire_reconfig_count if self._applier is not None else 0
 
     # -- checkpoint/restart ---------------------------------------------------
     def maybe_restore(self) -> bool:
@@ -148,17 +138,33 @@ class Trainer:
             self.tcfg.ckpt_dir, last, {"params": self.params, "opt": self.opt_state}
         )
         self.params, self.opt_state = state["params"], state["opt"]
+        # Placement state rides the manifest: restore it WITH the weights or
+        # the router would address pre-reconfiguration slots (DESIGN.md §9).
+        extra = ckpt.load_extra(self.tcfg.ckpt_dir, last)
+        if self._applier is not None and "placement" in extra:
+            self._applier.load_state_dict(extra["placement"])
+            self.expert_perm = self.controlplane.perm_stack()
+            self.reconfig_count = self.controlplane.reconfig_count
         self.step = last
         return True
 
     def _checkpoint(self):
         tree = {"params": self.params, "opt": self.opt_state}
+        extra = (
+            {"placement": self._applier.state_dict()}
+            if self._applier is not None
+            else None
+        )
         if self.tcfg.ckpt_async:
             ckpt.save_async(
-                self.tcfg.ckpt_dir, self.step, tree, keep=self.tcfg.ckpt_keep
+                self.tcfg.ckpt_dir, self.step, tree, keep=self.tcfg.ckpt_keep,
+                extra=extra,
             )
         else:
-            ckpt.save(self.tcfg.ckpt_dir, self.step, tree, keep=self.tcfg.ckpt_keep)
+            ckpt.save(
+                self.tcfg.ckpt_dir, self.step, tree, keep=self.tcfg.ckpt_keep,
+                extra=extra,
+            )
 
     # -- MixNet reconfiguration ------------------------------------------------
     def _wire_capable(self) -> bool:
@@ -175,64 +181,23 @@ class Trainer:
         )
 
     def _apply_layer_plans(self, plans: list[LayerPlan]) -> bool:
-        """Actuate per-layer placement plans.
-
-        A plan whose permutation moves whole device blocks is installed as a
-        **wire re-address** (``device_perm_from_slots`` -> the a2a's
-        ``op.reconfigure`` perms threaded to the model as ``wire_perm``) —
-        the expert weights never move, exactly like pushing a new cross-map
-        to the OCS.  Any other plan falls back to the weight gather,
-        flushing the layer's pending wire perm into the same gather so the
-        two realizations always compose.  Router-side perms go through the
-        engine either way (``perm[base]`` ordering).
-        """
-        cp = self.controlplane
-        live = [p for p in plans if p.reconfigure]
-        if not live:
-            return False
-        ev = cp.num_virtual
-        epd = cp.experts_per_device
-        p_axis = max(self.plan.model_size, 1)
-        wire_ok = self._wire_capable()
-        inv_stack = np.tile(np.arange(ev, dtype=np.int64), (cp.num_layers, 1))
-        gather_needed = False
-        for p in live:
-            devp = (
-                device_perm_from_slots(np.asarray(p.perm), epd) if wire_ok else None
+        """Actuate per-layer placement plans through the shared
+        :class:`PlacementApplier` (wire re-address for whole-device-block
+        plans, weight gather otherwise — DESIGN.md §3)."""
+        # Rebind when the engine was swapped after construction (tests inject
+        # custom-region ControlPlanes directly onto the trainer).
+        if self._applier is None or self._applier.cp is not self.controlplane:
+            self._applier = PlacementApplier(
+                self.controlplane, model_size=max(self.plan.model_size, 1)
             )
-            if devp is not None:
-                # Wire path: the occupant of logical device a moves to device
-                # devp[a]; physically nothing moves, so the layer's device
-                # map composes as D'[k] = D[devp^-1[k]].
-                if self.wire_perm is None:
-                    self.wire_perm = np.tile(
-                        np.arange(p_axis, dtype=np.int64), (cp.num_layers, 1)
-                    )
-                d_cur = self.wire_perm[p.layer]
-                self.wire_perm[p.layer] = d_cur[inverse_permutation(devp)]
-                self.wire_reconfig_count += 1
-                continue
-            inv = inverse_permutation(p.perm)
-            if self.wire_perm is not None and (
-                self.wire_perm[p.layer] != np.arange(p_axis)
-            ).any():
-                # Flush the pending wire perm into this gather: new physical
-                # slot s receives Phi(perm^-1(s)) where Phi maps logical slot
-                # -> physical slot under the current device map.
-                d_cur = self.wire_perm[p.layer]
-                slots = np.arange(ev)
-                phi = d_cur[slots // epd] * epd + slots % epd
-                inv = phi[inv]
-                self.wire_perm[p.layer] = np.arange(p_axis)
-            inv_stack[p.layer] = inv
-            gather_needed = True
-        if gather_needed:
-            self.params = permute_expert_weights(self.params, inv_stack, ev)
-        for p in live:
-            cp.apply(p)
-        self.expert_perm = cp.perm_stack()
-        self.reconfig_count = cp.reconfig_count
-        return True
+        ap = self._applier
+        # Re-evaluated per call: tests toggle _wire_capable on the instance.
+        ap.wire_capable = self._wire_capable()
+        self.params, changed = ap.apply(self.params, plans)
+        if changed:
+            self.expert_perm = self.controlplane.perm_stack()
+            self.reconfig_count = self.controlplane.reconfig_count
+        return changed
 
     def _reconfigure_step(self, expert_load: np.ndarray):
         """Drive one step of the Fig 20 loop through the shared engine.

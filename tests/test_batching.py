@@ -1,5 +1,7 @@
 """Continuous batching: per-slot positions produce exactly the tokens the
-lockstep single-sequence path produces, with staggered admission."""
+lockstep single-sequence path produces, with staggered admission — plus the
+slot-lifecycle hardening regressions (DESIGN.md §9): over-long prompts,
+EOS on the final allowed token, and dirty-slot cache reuse."""
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +14,13 @@ from repro.serve.batching import ContinuousBatcher, Request
 from repro.serve.decode import generate
 
 PLAN = make_plan(None)
+
+
+def _toy(name="cb"):
+    cfg = ModelConfig(name, "dense", 2, 32, 4, 2, 64, 64, dtype="float32",
+                      remat="none")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    return cfg, params
 
 
 def test_continuous_batching_matches_lockstep():
@@ -64,3 +73,110 @@ def test_per_slot_t_decode_vector():
     err0 = float(jnp.max(jnp.abs(full[0, 8] - feats[0, 0])))
     err1 = float(jnp.max(jnp.abs(full[1, 11] - feats[1, 0])))
     assert err0 < 2e-3 and err1 < 2e-3, (err0, err1)
+
+
+# ---------------------------------------------------------------------------
+# slot-lifecycle hardening (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def test_overlong_prompt_rejected_not_corrupting():
+    """A prompt longer than the slot cache is rejected with ``req.error``
+    instead of wrapping the ring buffer, and co-scheduled requests still
+    produce exactly their independent-decode tokens."""
+    cfg, params = _toy()
+    rng = np.random.default_rng(1)
+    good = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    ref = np.asarray(generate(params, cfg, PLAN, jnp.asarray(good[None]),
+                              max_new_tokens=4))[0].tolist()
+
+    cb = ContinuousBatcher(params, cfg, PLAN, slots=2, max_len=16)
+    too_long = rng.integers(0, cfg.vocab_size, size=17).astype(np.int32)
+    cb.submit(Request(rid=0, prompt=too_long, max_new_tokens=4))
+    cb.submit(Request(rid=1, prompt=good, max_new_tokens=4))
+    done = cb.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].error == "prompt_too_long"
+    assert by_rid[0].out == []
+    assert by_rid[1].error is None and by_rid[1].out == ref
+
+
+def test_prompt_exactly_fills_cache_emits_one_token():
+    """len(prompt) == max_len leaves no decode room: the prefill's next-token
+    is emitted and the request finishes (no ring-buffer wrap)."""
+    cfg, params = _toy()
+    prompt = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, size=16).astype(np.int32)
+    cb = ContinuousBatcher(params, cfg, PLAN, slots=1, max_len=16)
+    cb.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    done = cb.run()
+    assert len(done) == 1 and done[0].error is None
+    assert len(done[0].out) == 1
+    # and the one token matches the independent prefill
+    ref = np.asarray(generate(params, cfg, PLAN, jnp.asarray(prompt[None]),
+                              max_new_tokens=1))[0].tolist()
+    assert done[0].out == ref
+
+
+def test_eos_on_final_allowed_token():
+    """EOS arriving exactly at the max_new_tokens boundary finishes the
+    request like an early EOS: the token is kept, nothing decodes past it."""
+    cfg, params = _toy()
+    prompt = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, size=5).astype(np.int32)
+    free = ContinuousBatcher(params, cfg, PLAN, slots=1, max_len=32)
+    free.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    base = free.run()[0].out
+    assert len(base) == 6
+    # EOS == the 6th emitted token: identical output either way.
+    cb = ContinuousBatcher(params, cfg, PLAN, slots=1, max_len=32)
+    cb.submit(Request(rid=0, prompt=prompt, max_new_tokens=6, eos_id=base[-1]))
+    out = cb.run()[0].out
+    assert out == base
+    # EOS == an EARLIER token: truncates right there (sanity of the same path)
+    cb2 = ContinuousBatcher(params, cfg, PLAN, slots=1, max_len=32)
+    cb2.submit(Request(rid=0, prompt=prompt, max_new_tokens=6, eos_id=base[2]))
+    out2 = cb2.run()[0].out
+    assert out2 == base[:3]
+
+
+def test_dirty_slot_reuse_matches_fresh_batcher():
+    """Re-admission into a slot whose cache still holds a LONGER evicted
+    sequence must decode exactly like a fresh batcher: decode reads are
+    masked to pos <= t, so the stale tail is never attended."""
+    cfg, params = _toy()
+    rng = np.random.default_rng(4)
+    long_p = rng.integers(0, cfg.vocab_size, size=14).astype(np.int32)
+    short_p = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+
+    dirty = ContinuousBatcher(params, cfg, PLAN, slots=1, max_len=32)
+    dirty.submit(Request(rid=0, prompt=long_p, max_new_tokens=8))
+    dirty.submit(Request(rid=1, prompt=short_p, max_new_tokens=8))
+    done = {r.rid: r.out for r in dirty.run()}
+
+    fresh = ContinuousBatcher(params, cfg, PLAN, slots=1, max_len=32)
+    fresh.submit(Request(rid=1, prompt=short_p, max_new_tokens=8))
+    ref = fresh.run()[0].out
+    assert done[1] == ref
+
+
+def test_chunked_prefill_matches_whole_prefill_tokens():
+    """Chunked prefill (decode-mode continuation) produces the same greedy
+    tokens as whole-prompt prefill admission for a toy model, including a
+    chunk-size remainder, and is deterministic across runs."""
+    cfg, params = _toy("cbchunk")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (11, 7)]
+
+    def run(chunk):
+        cb = ContinuousBatcher(params, cfg, PLAN, slots=2, max_len=32,
+                               prefill_chunk=chunk)
+        for i, p in enumerate(prompts):
+            cb.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+        return {r.rid: r.out for r in cb.run()}
+
+    whole = run(0)  # chunking disabled -> whole-prompt prefill
+    chunked = run(4)
+    assert chunked == whole
+    assert run(4) == chunked  # deterministic

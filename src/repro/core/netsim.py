@@ -460,6 +460,12 @@ class ServingResult:
     # CommRuntime formula (ep_alltoall_bytes) the real engine reports — the
     # serving cross-check in tests/test_serve.py.
     a2a_bytes_total: float
+    # Paged-KV accounting (DESIGN.md §10): decode HBM reads priced from the
+    # resident pages actually touched per tick, and admission gated by the
+    # KV token budget instead of a fixed slot preallocation.
+    kv_paged: bool = False
+    kv_resident_tokens_peak: int = 0
+    kv_budget_tokens: int = 0
 
     def breakdown(self) -> dict:
         return dataclasses.asdict(self)
@@ -479,6 +485,9 @@ def simulate_serving(
     num_servers_region: int | None = None,
     gpus_per_server: int = 8,
     max_ticks: int = 200_000,
+    paged_kv: bool = False,
+    kv_page_tokens: int = 16,
+    kv_budget_tokens: int = 0,
 ) -> ServingResult:
     """Price a continuous-batching serving run of ``model`` on ``fabric``.
 
@@ -496,6 +505,16 @@ def simulate_serving(
     reconfiguration delay over the window's compute; a static EPS fabric
     (e.g. fat-tree) with ``use_reconfig=False`` is the baseline the
     goodput-per-dollar gate compares against.
+
+    **Paged KV** (``paged_kv=True``, DESIGN.md §10): each request's KV
+    footprint is its *page-rounded live context* instead of a full-length
+    slot preallocation, a region's shared prompt prefix is resident ONCE
+    (copy-on-write pages, mirroring the engine's prefix registry), and the
+    per-tick decode HBM-read term charges only the resident pages touched.
+    ``kv_budget_tokens`` caps resident KV tokens: admission stalls at the
+    head of the prefill queue until retiring requests release pages —
+    exactly how :class:`repro.serve.paged.PageAllocator` gates the engine —
+    so at equal HBM budget the paged run sustains more concurrent decodes.
     """
     from repro.core import cost as costm
     from repro.serve.workload import WorkloadGenerator
@@ -517,6 +536,50 @@ def simulate_serving(
 
     pending = sorted(requests, key=lambda r: r.arrival_s)
     cursor = 0
+
+    # -- KV residency bookkeeping (tokens) --------------------------------
+    # Dense: an admitted request pins its full prompt+output length for its
+    # whole lifetime (slot preallocation).  Paged: it pins page-rounded live
+    # context, and a region's shared prompt prefix is resident once across
+    # all carriers (the engine's refcounted prefix pages).
+    page = max(int(kv_page_tokens), 1)
+    region_refs: dict[int, int] = {}  # carriers per region's shared prefix
+    resident_tokens = 0
+    resident_peak = 0
+
+    def _kv_parts(req):
+        total = req.prompt_len + req.max_new_tokens
+        if not paged_kv:
+            return 0, total
+        pfx = min(getattr(req, "prefix_len", 0), req.prompt_len)
+        return -(-pfx // page) * page, -(-(total - pfx) // page) * page
+
+    def _kv_acquire(req):
+        nonlocal resident_tokens
+        shared, private = _kv_parts(req)
+        resident_tokens += private
+        if shared:
+            n = region_refs.get(req.region, 0)
+            region_refs[req.region] = n + 1
+            if n == 0:
+                resident_tokens += shared
+
+    def _kv_release(req):
+        nonlocal resident_tokens
+        shared, private = _kv_parts(req)
+        resident_tokens -= private
+        if shared:
+            n = region_refs[req.region] - 1
+            region_refs[req.region] = n
+            if n == 0:
+                resident_tokens -= shared
+
+    def _kv_fresh_cost(req):
+        shared, private = _kv_parts(req)
+        if shared and region_refs.get(req.region, 0) > 0:
+            shared = 0  # prefix already resident: pages map for free
+        return private + shared
+
     prefill_q: list = []  # [req, tokens_left]
     live: list = []  # [req, tokens_left, context_len]
     ttft: list[float] = []
@@ -550,12 +613,22 @@ def simulate_serving(
         for item in prefill_q:
             if budget <= 0 or len(live) + len(finished_prefills) >= slots:
                 break
+            if item[1] == item[0].prompt_len:  # starting this request now
+                need = _kv_fresh_cost(item[0])
+                if (
+                    kv_budget_tokens
+                    and resident_tokens + need > kv_budget_tokens
+                    and resident_tokens > 0  # an empty pool always admits one
+                ):
+                    break  # head-of-line waits for retiring requests' pages
+                _kv_acquire(item[0])
             take = min(budget, item[1])
             item[1] -= take
             budget -= take
             pf_tokens += take
             if item[1] == 0:
                 finished_prefills.append(item[0])
+        resident_peak = max(resident_peak, resident_tokens)
 
         # Per-layer phase pricing: the a2a moves every routed token copy of
         # the tick (live decode + prefill chunk) — the same byte formula the
@@ -576,9 +649,26 @@ def simulate_serving(
             # from HBM, which is what puts real decode ticks at ms scale and
             # makes the 25 ms OCS hideable across a reconfiguration window.
             hbm = model.hbm_bytes_per_s * model.gpus_per_stage
+            if paged_kv:
+                # KV read = resident pages TOUCHED this tick: each slot
+                # streams its own page-rounded context, but a shared prefix
+                # page transits HBM once for all carriers reading it.
+                shared_touch: dict[int, int] = {}
+                private_pages = 0
+                for it in live:
+                    pfx = min(getattr(it[0], "prefix_len", 0), it[2])
+                    shared_touch[it[0].region] = max(
+                        shared_touch.get(it[0].region, 0), -(-pfx // page)
+                    )
+                    private_pages += -(-(it[2] - pfx) // page)
+                kv_read_tokens = (
+                    private_pages + sum(shared_touch.values())
+                ) * page
+            else:
+                kv_read_tokens = n_live * mean_ctx
             attn_t = max(
                 (2 * n_live * 4 * d * d + 2 * 2 * n_live * mean_ctx * d) / rate,
-                (n_live * mean_ctx * 2 * d * dt) / hbm,  # KV read
+                (kv_read_tokens * 2 * d * dt) / hbm,  # KV read
             )
             exp_t = max(
                 2 * n_live * k * 3 * d * dff / rate,
@@ -637,6 +727,7 @@ def simulate_serving(
             tokens_out += 1
             if it[1] <= 0:
                 completed += 1
+                _kv_release(it[0])
                 span = max(clock - it[3], 0.0)
                 tpot.append(span / max(it[0].max_new_tokens - 1, 1))
             else:
@@ -648,6 +739,7 @@ def simulate_serving(
             tokens_out += 1  # the prefill's next-token (first output)
             if req.max_new_tokens <= 1:
                 completed += 1
+                _kv_release(req)
             else:
                 live.append([req, req.max_new_tokens - 1, req.prompt_len, clock])
 
@@ -681,6 +773,9 @@ def simulate_serving(
         reconfig_count=cp.reconfig_count if cp is not None else 0,
         reconfig_blocked_s=blocked_total,
         a2a_bytes_total=a2a_bytes_total,
+        kv_paged=bool(paged_kv),
+        kv_resident_tokens_peak=int(resident_peak),
+        kv_budget_tokens=int(kv_budget_tokens),
     )
 
 

@@ -14,7 +14,10 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (
+    flash_attention_pallas,
+    paged_flash_decode_pallas,
+)
 from repro.kernels.grouped_matmul import (
     grouped_matmul_blocks_pallas,
     grouped_matmul_pallas,
@@ -24,7 +27,7 @@ from repro.kernels.topk_gating import topk_gating_pallas
 
 __all__ = [
     "grouped_matmul", "topk_gating", "moe_dispatch", "moe_combine",
-    "flash_attention", "rmsnorm", "ssd_chunk", "on_tpu",
+    "flash_attention", "paged_flash_decode", "rmsnorm", "ssd_chunk", "on_tpu",
 ]
 
 
@@ -109,6 +112,33 @@ def flash_attention(
     # bounded buffers (semantically identical to ref; tested).
     return ref.flash_attention_chunked(
         q, k, v, causal=causal, window=window, softcap=softcap
+    )
+
+
+def paged_flash_decode(
+    q,
+    k_pool,
+    v_pool,
+    page_table,
+    lengths,
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+    backend: str = "auto",
+):
+    """Decode / chunked-continuation attention through a paged KV cache:
+    ``q [B, C, Hq, D]`` against pools ``[N, page, Hkv, D]`` gathered via
+    ``page_table [B, P]`` (i32 page ids, -1 = unallocated) with per-sequence
+    ``lengths [B]``.  Both paths run the same streaming-softmax schedule, so
+    pallas-vs-ref is bit-exact (tested in interpret mode)."""
+    mode = _resolve_simple(backend)
+    if mode == "pallas":
+        return paged_flash_decode_pallas(
+            q, k_pool, v_pool, page_table, lengths,
+            window=window, softcap=softcap, interpret=not on_tpu(),
+        )
+    return ref.paged_flash_decode(
+        q, k_pool, v_pool, page_table, lengths, window=window, softcap=softcap
     )
 
 

@@ -8,6 +8,8 @@ speed).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -19,6 +21,8 @@ __all__ = [
     "topk_gating",
     "flash_attention",
     "flash_attention_chunked",
+    "paged_flash_decode",
+    "paged_gather_kv",
 ]
 
 
@@ -182,4 +186,107 @@ def flash_attention_chunked(
 
     starts = jnp.arange(nq) * bq
     out, _ = jax.lax.scan(body, jnp.zeros_like(q), starts)
+    return out
+
+
+def paged_gather_kv(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Gather a paged pool into a contiguous per-sequence view.
+
+    Args:
+      pool: ``[N, page, ...]`` page pool (K, V, or any per-position leaf).
+      page_table: ``[B, P]`` i32 page ids, -1 = unallocated (gathered as page
+        0 — callers mask positions past the sequence length).
+    Returns:
+      ``[B, P * page, ...]``: position ``pos`` of sequence ``b`` at view
+      index ``pos`` (page ``pos // page``, offset ``pos % page``).
+    """
+    gathered = jnp.take(pool, jnp.maximum(page_table, 0), axis=0)  # [B,P,page,...]
+    b, p, page = gathered.shape[:3]
+    return gathered.reshape(b, p * page, *gathered.shape[3:])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap"))
+def paged_flash_decode(
+    q: jax.Array,  # [B, C, Hq, D]
+    k_pool: jax.Array,  # [N, page, Hkv, D]
+    v_pool: jax.Array,
+    page_table: jax.Array,  # [B, P] i32, -1 = unallocated
+    lengths: jax.Array,  # [B] i32 — chunk row c attends positions <= t + c
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Oracle for :func:`..flash_attention.paged_flash_decode_pallas`.
+
+    Mirrors the kernel's exact execution structure: one ``fori_loop`` over
+    the flattened ``(B, Hq, pages)`` grid (pages innermost, like the TPU
+    grid), the same ``[C, D] x [page, D]`` 2D tile dots, select-based scratch
+    init at ``p == 0``, and the identical streaming-softmax recurrence.
+    Deliberately NOT a batched einsum formulation and jitted at the
+    definition: batching the dots or unrolling the page loop changes XLA's
+    contraction/FMA-fusion choices and drifts from the interpret-mode kernel
+    by ~1 ulp per page, while this loop form is bit-exact (asserted
+    ``== 0.0`` in the tests).  Models read paged caches off-TPU through a
+    dense gathered view instead (see ``models/layers.py``); this function is
+    the kernel's semantics of record.
+    """
+    b, c, hq, d = q.shape
+    _, page, hkv, _ = k_pool.shape
+    pages = page_table.shape[1]
+    group = hq // hkv
+    scale = 1.0 / (d**0.5)
+    table = page_table.astype(jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+
+    def body(i, carry):
+        m, l, acc, out = carry
+        bi = i // (hq * pages)
+        hi = (i // pages) % hq
+        p = i % pages
+        m = jnp.where(p == 0, jnp.full_like(m, -1e30), m)
+        l = jnp.where(p == 0, jnp.zeros_like(l), l)
+        acc = jnp.where(p == 0, jnp.zeros_like(acc), acc)
+        qt = jax.lax.dynamic_slice(q, (bi, 0, hi, 0), (1, c, 1, d))[0, :, 0, :]
+        pid = jnp.maximum(table[bi, p], 0)
+        kh = hi // group
+        k = jax.lax.dynamic_slice(
+            k_pool, (pid, 0, kh, 0), (1, page, 1, d)
+        )[0, :, 0, :]
+        v = jax.lax.dynamic_slice(
+            v_pool, (pid, 0, kh, 0), (1, page, 1, d)
+        )[0, :, 0, :]
+        s = jnp.dot(
+            qt.astype(jnp.float32) * scale,
+            k.astype(jnp.float32).T,
+            preferred_element_type=jnp.float32,
+        )  # [C, page]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = lens[bi] + jax.lax.broadcasted_iota(jnp.int32, (c, page), 0)
+        k_pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (c, page), 1)
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p_tile = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p_tile, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(
+            p_tile, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        # The same (bi, hi) output block is revisited for every p; the last
+        # visit (p == pages - 1) leaves the final normalized tile in place.
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o = (acc / denom).astype(q.dtype)
+        out = jax.lax.dynamic_update_slice(out, o[None, :, None, :], (bi, 0, hi, 0))
+        return (m_new, l, acc, out)
+
+    init = (
+        jnp.full((c, 1), -1e30, jnp.float32),
+        jnp.zeros((c, 1), jnp.float32),
+        jnp.zeros((c, d), jnp.float32),
+        jnp.zeros(q.shape, q.dtype),
+    )
+    _, _, _, out = jax.lax.fori_loop(0, b * hq * pages, body, init)
     return out

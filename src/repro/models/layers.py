@@ -148,6 +148,29 @@ def _decode_attention(
         idx = jnp.where(write_mask[:, None], idx, s)
     ck = ck.at[bi, idx].set(k_new.astype(ck.dtype), mode="drop")
     cv = cv.at[bi, idx].set(v_new.astype(cv.dtype), mode="drop")
+    out = _attend_cache_view(q, ck, cv, pos_c, window=window, softcap=softcap)
+    return out, {"k": ck, "v": cv}
+
+
+def _attend_cache_view(
+    q: jax.Array,  # [B, C, H, dh]
+    ck: jax.Array,  # [B, S, Hkv, dh] — dense cache or gathered paged view
+    cv: jax.Array,
+    pos_c: jax.Array,  # [B, C] absolute position of each chunk row
+    *,
+    window: int | None,
+    softcap: float | None,
+) -> jax.Array:
+    """Full-softmax chunk attention against a contiguous K/V view.
+
+    Shared by the dense ring-buffer path and the paged path's gathered view:
+    positions past ``pos_c`` (and, for paged, anything reachable through an
+    unallocated table entry) are forced to -1e30 before the softmax, so the
+    two paths run the identical graph on identical post-mask values — this
+    is what makes paged-vs-dense generation bit-identical off-TPU."""
+    b, s, hkv, dh = ck.shape
+    c, h = q.shape[1], q.shape[2]
+    group = h // hkv
     scale = dh**-0.5
     # bf16 operands + f32 accumulation: the cache is read in its own dtype
     # (no f32 copy of a multi-GB buffer), scores accumulate in f32.
@@ -167,7 +190,58 @@ def _decode_attention(
         "bkgcs,bskd->bckgd", probs.astype(cv.dtype), cv,
         preferred_element_type=jnp.float32,
     ).reshape(b, c, h, dh)
-    return out.astype(q.dtype), {"k": ck, "v": cv}
+    return out.astype(q.dtype)
+
+
+def _paged_decode_attention(
+    q: jax.Array,  # [B, C, H, dh]
+    k_new: jax.Array,  # [B, C, Hkv, dh]
+    v_new: jax.Array,
+    cache: dict,  # {"k","v": [N, page, Hkv, dh]} page pool shared by slots
+    page_table: jax.Array,  # [B, P] i32 page ids, -1 = unallocated
+    t: jax.Array,  # first written position (scalar or [B])
+    *,
+    window: int | None,
+    softcap: float | None,
+    write_mask: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """Paged-cache counterpart of :func:`_decode_attention` (DESIGN.md §10).
+
+    K/V for positions ``t .. t+C-1`` are scattered into the page pool at
+    ``(table[b, pos // page], pos % page)``; rows whose table entry is -1
+    (or whose ``write_mask`` is off) scatter out of bounds and drop — the
+    host-side allocator is responsible for mapping every live position to a
+    private (CoW-forked) page before the step runs.  Reads go through the
+    pallas kernel on TPU and through a gathered contiguous view into the
+    shared full-softmax math elsewhere, which keeps off-TPU generation
+    bit-identical to the dense ring buffer."""
+    ck, cv = cache["k"], cache["v"]
+    n_pages, page, hkv, dh = ck.shape
+    b, c = q.shape[0], q.shape[1]
+    maxp = page_table.shape[1]
+    t = jnp.broadcast_to(jnp.asarray(t), (b,))
+    pos_c = t[:, None] + jnp.arange(c)  # [B, C] absolute positions
+    logical = jnp.minimum(pos_c // page, maxp - 1)
+    pid = jnp.take_along_axis(page_table, logical, axis=1)  # [B, C]
+    off = jnp.mod(pos_c, page)
+    if write_mask is not None:
+        pid = jnp.where(write_mask[:, None], pid, -1)
+    pid = jnp.where(pid >= 0, pid, n_pages)  # unallocated/dead -> dropped
+    ck = ck.at[pid, off].set(k_new.astype(ck.dtype), mode="drop")
+    cv = cv.at[pid, off].set(v_new.astype(cv.dtype), mode="drop")
+    new_cache = {"k": ck, "v": cv}
+    if ops.on_tpu():
+        out = ops.paged_flash_decode(
+            q, ck, cv, page_table, t, window=window, softcap=softcap
+        )
+        return out.astype(q.dtype), new_cache
+    safe = jnp.maximum(page_table, 0)
+    view_k = jnp.take(ck, safe, axis=0).reshape(b, maxp * page, hkv, dh)
+    view_v = jnp.take(cv, safe, axis=0).reshape(b, maxp * page, hkv, dh)
+    out = _attend_cache_view(
+        q, view_k, view_v, pos_c, window=window, softcap=softcap
+    )
+    return out, new_cache
 
 
 def attention_apply(
@@ -184,6 +258,7 @@ def attention_apply(
     plan=None,
     mesh=None,
     write_mask: jax.Array | None = None,
+    page_table: jax.Array | None = None,
 ) -> tuple[jax.Array, dict | None]:
     import math
 
@@ -207,10 +282,16 @@ def attention_apply(
             pos = jnp.stack([pos] * 3)
         q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, pos, cfg.rope_theta, cfg.mrope_sections)
-        out, cache = _decode_attention(
-            q, k, v, cache, t, window=window, softcap=cfg.logit_softcap,
-            write_mask=write_mask,
-        )
+        if page_table is not None:
+            out, cache = _paged_decode_attention(
+                q, k, v, cache, page_table, t, window=window,
+                softcap=cfg.logit_softcap, write_mask=write_mask,
+            )
+        else:
+            out, cache = _decode_attention(
+                q, k, v, cache, t, window=window, softcap=cfg.logit_softcap,
+                write_mask=write_mask,
+            )
     else:
         q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
@@ -269,6 +350,19 @@ def init_attention_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
     return {
         "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, dh), dt),
         "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, dh), dt),
+    }
+
+
+def init_paged_attention_cache(
+    cfg, num_pages: int, page_size: int, dtype=None
+) -> dict:
+    """Page-pool K/V cache: ``[N, page, Hkv, dh]`` shared by every slot —
+    sequences own pages through a ``[slots, P]`` table, not a batch dim."""
+    dh = cfg.resolved_head_dim
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, dh), dt),
+        "v": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, dh), dt),
     }
 
 

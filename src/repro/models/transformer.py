@@ -163,7 +163,10 @@ def init_caches(cfg, batch: int, max_len: int, plan: ShardingPlan | None = None)
                     (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.resolved_head_dim),
                     jnp.dtype(cfg.dtype),
                 )
-                c["xv"] = c["xk"]
+                # Distinct buffer, not an alias: serving scatters caches
+                # through donated jit calls, and XLA rejects a pytree that
+                # donates the same buffer twice.
+                c["xv"] = jnp.zeros_like(c["xk"])
             return c
         if kind == "rglru":
             return rglru_mod.init_rglru_cache(cfg, batch)
@@ -184,6 +187,40 @@ def init_caches(cfg, batch: int, max_len: int, plan: ShardingPlan | None = None)
     return caches
 
 
+def paged_supported(cfg) -> bool:
+    """True when every decode-time cache is a plain GQA attention K/V pair —
+    the only layout the page pool holds.  MLA (compressed kv), audio
+    cross-attention, and rglru/ssm state caches stay on the dense path."""
+    return (
+        all(k in ("global", "local") for k in cfg.block_pattern)
+        and not cfg.tail_pattern
+        and cfg.mla is None
+        and cfg.family != "audio"
+    )
+
+
+def init_paged_caches(cfg, num_pages: int, page_size: int):
+    """Paged decode caches: one ``[repeats, N, page, Hkv, dh]`` K/V page pool
+    per pattern position, shared by every serving slot.  Sequences own pages
+    through a single ``[slots, P]`` page table (the same logical position
+    maps to the same page id in every layer's pool), passed to
+    :func:`model_apply` as a traced argument — shapes stay static under jit
+    while the table contents change every tick."""
+    if not paged_supported(cfg):
+        raise ValueError(
+            f"paged KV cache requires an attention-only pattern, got "
+            f"{cfg.block_pattern} / tail {cfg.tail_pattern} / mla={cfg.mla}"
+        )
+    reps = cfg.pattern_repeats
+    caches = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        c = L.init_paged_attention_cache(cfg, num_pages, page_size)
+        caches[f"{i}_{kind}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (reps, *x.shape)), c
+        )
+    return caches
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
@@ -191,7 +228,7 @@ def init_caches(cfg, batch: int, max_len: int, plan: ShardingPlan | None = None)
 
 def _apply_block(
     kind, p, x, cfg, plan, mesh, mode, cache, t, enc_out, expert_perm, positions,
-    act_spec=None, wire_perm=None, gate_weights=None,
+    act_spec=None, wire_perm=None, gate_weights=None, page_table=None,
 ):
     new_cache = dict(cache) if cache is not None else ({} if mode != "train" else None)
     stats = None
@@ -224,7 +261,7 @@ def _apply_block(
             y, ac = L.attention_apply(
                 p["attn"], h, cfg, kind=kind, mode=mode, cache=attn_cache, t=t,
                 positions=positions, plan=plan, mesh=mesh,
-                write_mask=write_mask,
+                write_mask=write_mask, page_table=page_table,
             )
         x = x + seq_shard(y)
         if ac is not None:
@@ -353,6 +390,7 @@ def model_apply(
     expert_perm=None,
     wire_perm=None,
     gate_weights=None,
+    page_table=None,
 ):
     """Run the model.
 
@@ -363,6 +401,9 @@ def model_apply(
     control plane installed as wire re-addresses instead of weight gathers.
     ``gate_weights``: optional [B, S] per-token weight for the exported MoE
     gate-load telemetry (the serving engine's live-slot mask, DESIGN.md §9).
+    ``page_table``: optional [B, P] i32 page ids (-1 = unallocated) switching
+    decode-mode attention onto the paged KV pool from
+    :func:`init_paged_caches` (DESIGN.md §10).
     Returns (features [B,S,D], aux, new_caches).  Use
     :func:`chunked_cross_entropy` / :func:`logits` on the features.
     """
@@ -483,7 +524,7 @@ def model_apply(
             x, nc, st = _apply_block(
                 kind, gp, x, cfg, plan, mesh, mode, cache_i, t,
                 enc_out, perm, positions, act_spec=_act_spec, wire_perm=wire,
-                gate_weights=gate_weights,
+                gate_weights=gate_weights, page_table=page_table,
             )
             x = constrain(x, mesh, _act_spec)
             if new_caches is not None:

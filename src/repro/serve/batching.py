@@ -29,11 +29,24 @@ The serving engine (:mod:`repro.serve.engine`) threads runtime placement
 state through the ``expert_perm`` / ``wire_perm`` attributes and reads
 per-tick gate loads from :class:`TickStats` — the decode-time control-plane
 contract.
+
+**Paged KV cache** (DESIGN.md §10, auto-on when the model supports it): the
+per-slot ring buffer is replaced by flat page pools plus a
+``[slots, max_pages]`` table managed by :class:`repro.serve.paged.PageAllocator`.
+Admission reserves pages up front (so a live slot never deadlocks on an
+exhausted pool), prompt prefill scatters K/V into freshly allocated pages,
+full prompt pages are published to a prefix registry for copy-on-write reuse
+by later requests with the same system-prompt prefix, and slot retirement
+returns pages to the free list.  HBM residency follows the *live token*
+footprint instead of ``slots x max_len``, which is what lets the same pool
+bytes serve more concurrent slots — the page-table indirection itself is
+priced in the serving scenario of :mod:`repro.core.netsim`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 
 import jax
@@ -41,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tfm
+from repro.serve.paged import PageAllocator
 from repro.train.train_step import (
     make_prefill_chunk_step,
     make_prefill_step,
@@ -48,6 +62,49 @@ from repro.train.train_step import (
 )
 
 __all__ = ["ContinuousBatcher", "Request", "TickStats"]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_slot_caches(caches, one, slot):
+    """Write ONE slot's column of every dense cache leaf.
+
+    The donated input is the fix for the admission-path copy bug: an undonated
+    ``full.at[:, slot].set(...)`` outside jit materializes a fresh
+    ``slots x max_len`` copy of every leaf per admitted request; donated under
+    jit it lowers to an aliased dynamic-update-slice that touches only the
+    target column.  ``slot`` is traced, so all slots share one compile."""
+
+    def sc(full, new):
+        return jax.lax.dynamic_update_slice_in_dim(
+            full, new.astype(full.dtype), slot, axis=1
+        )
+
+    return jax.tree.map(sc, caches, one)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_prompt_pages(caches, one, page_ids):
+    """Scatter a batch-1 prefill's K/V into the page pool.
+
+    ``one`` leaves are ``[reps, 1, P*page, Hkv, dh]`` (padded to the table's
+    span); ``page_ids [P]`` maps logical page j to its pool slot, -1 entries
+    (past the prompt, or reused prefix pages that must not be overwritten)
+    scatter out of bounds and drop."""
+
+    def sc(pool, new):
+        reps, n_pages, page = pool.shape[0], pool.shape[1], pool.shape[2]
+        maxp = page_ids.shape[0]
+        r = new[:, 0].reshape(reps, maxp, page, *new.shape[3:])
+        pid = jnp.where(page_ids >= 0, page_ids, n_pages)
+        return pool.at[:, pid].set(r.astype(pool.dtype), mode="drop")
+
+    return jax.tree.map(sc, caches, one)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_pages(caches, src, dst):
+    """Copy-on-write fork: duplicate pages ``src -> dst`` in every pool."""
+    return jax.tree.map(lambda pool: pool.at[:, dst].set(pool[:, src]), caches)
 
 
 @dataclasses.dataclass
@@ -97,6 +154,10 @@ class ContinuousBatcher:
         mesh=None,
         prefill_chunk: int = 0,
         sample: bool = False,
+        paged: bool | None = None,
+        page_size: int = 16,
+        num_pages: int = 0,
+        prefix_cache: bool = True,
     ):
         self.params = params
         self.cfg = cfg
@@ -109,21 +170,52 @@ class ContinuousBatcher:
         self.active: list[Request | None] = [None] * slots
         self.t = np.zeros(slots, np.int32)  # next write position per slot
         self.tokens = np.zeros((slots, 1), np.int32)
-        self.caches = tfm.init_caches(cfg, slots, max_len)
+        # Paged KV cache (DESIGN.md §10): auto-on for attention-only models;
+        # `paged=False` keeps the dense ring buffer (the bit-parity reference
+        # and the fallback for MLA / recurrent / audio cache layouts).
+        self.paged = tfm.paged_supported(cfg) if paged is None else bool(paged)
+        self.alloc: PageAllocator | None = None
+        if self.paged:
+            self.page_size = int(page_size)
+            self.max_pages = -(-max_len // self.page_size)
+            self.num_pages = int(num_pages) or slots * self.max_pages
+            self.caches = tfm.init_paged_caches(
+                cfg, self.num_pages, self.page_size
+            )
+            self.alloc = PageAllocator(
+                slots=slots,
+                page_size=self.page_size,
+                max_pages=self.max_pages,
+                num_pages=self.num_pages,
+                prefix_cache=prefix_cache,
+            )
+        else:
+            self.caches = tfm.init_caches(cfg, slots, max_len)
+        # Caches are donated into the decode/chunk steps so the slot (or page
+        # pool) updates lower to in-place dynamic-update-slices instead of a
+        # full-cache copy per tick.
         self._step = jax.jit(
-            make_serve_step(cfg, plan, mesh=mesh, sample=sample, with_stats=True)
+            make_serve_step(cfg, plan, mesh=mesh, sample=sample, with_stats=True),
+            donate_argnums=(1,),
         )
         self._prefill_fn = jax.jit(
             make_prefill_step(cfg, plan, mesh=mesh, with_stats=True)
         )
+        # Paged mode always builds the chunk step: a prefix-cache hit resumes
+        # the prompt mid-way as a decode-mode continuation even when chunked
+        # prefill is off.
         self._chunk_fn = (
-            jax.jit(make_prefill_chunk_step(cfg, plan, mesh=mesh, with_stats=True))
-            if self.prefill_chunk > 0
+            jax.jit(
+                make_prefill_chunk_step(cfg, plan, mesh=mesh, with_stats=True),
+                donate_argnums=(1,),
+            )
+            if self.prefill_chunk > 0 or self.paged
             else None
         )
         self.prefilling: deque[_Prefill] = deque()
         self.finished: list[Request] = []
         self.tick = 0
+        self.kv_resident_pages_peak = 0
         # Runtime placement state, threaded by the serving engine (identity
         # when no control plane drives this batcher).  Stored as numpy; the
         # jitted steps receive them as traced values, so a reconfiguration
@@ -182,13 +274,28 @@ class ContinuousBatcher:
                 req.error = "prompt_too_long"
                 self._finish(req)
                 continue
+            plan_a = None
+            if self.paged:
+                plan_a = self.alloc.admit(
+                    slot, req.prompt, req.max_new_tokens, self.max_len
+                )
+                if plan_a is None:
+                    # Pool cannot cover the request yet; keep FIFO order and
+                    # wait for retiring slots to release pages.
+                    self.queue.appendleft(req)
+                    break
             admitted += 1
-            if self._chunk_fn is not None:
+            if self.prefill_chunk > 0:
                 # Chunked prefill: reserve the slot, stream the prompt
-                # through the tick loop (see _advance_prefill).
-                self.prefilling.append(_Prefill(req, slot))
+                # through the tick loop (see _advance_prefill) — starting
+                # past any prefix-cache hit.
+                start = plan_a.start if plan_a is not None else 0
+                self.prefilling.append(_Prefill(req, slot, pos=start))
                 continue
-            load = self._admit_whole(req, slot, load)
+            if self.paged:
+                load = self._admit_paged(req, slot, plan_a, load)
+            else:
+                load = self._admit_whole(req, slot, load)
         return admitted, load
 
     def _admit_whole(self, req: Request, slot: int, load):
@@ -200,12 +307,9 @@ class ContinuousBatcher:
         next_tok, one, stats = self._prefill_fn(self.params, batch, perm, wire)
         first = int(next_tok[0, 0])
         one = tfm.pad_caches(one, self.max_len)
-
-        def scatter(full, new):
-            # full: [reps, slots, ...]; new: [reps, 1, ...]
-            return full.at[:, slot].set(new[:, 0].astype(full.dtype))
-
-        self.caches = jax.tree.map(scatter, self.caches, one)
+        self.caches = _scatter_slot_caches(
+            self.caches, one, jnp.asarray(slot, jnp.int32)
+        )
         if stats is not None:
             s = np.asarray(stats)
             load = s if load is None else load + s
@@ -216,14 +320,79 @@ class ContinuousBatcher:
         self.tokens[slot, 0] = first
         return load
 
+    def _admit_paged(self, req: Request, slot: int, plan_a, load):
+        """Paged admission: whole-prompt prefill scatters K/V into freshly
+        allocated pages; a prefix-cache hit skips the reused pages and runs
+        only the remainder as a decode-mode continuation chunk."""
+        prompt = np.asarray(req.prompt)
+        n = len(prompt)
+        perm, wire = self._perm_args()
+        if plan_a.start == 0:
+            self._apply_forks(self.alloc.ensure(slot, 0, n))
+            batch = {"tokens": jnp.asarray(prompt[None, :])}
+            next_tok, one, stats = self._prefill_fn(self.params, batch, perm, wire)
+            one = tfm.pad_caches(one, self.max_pages * self.page_size)
+            self.caches = _scatter_prompt_pages(
+                self.caches, one, jnp.asarray(self.alloc.table[slot])
+            )
+        else:
+            self._apply_forks(self.alloc.ensure(slot, plan_a.start, n))
+            next_tok, stats = self._run_chunk(
+                slot, prompt[plan_a.start :], plan_a.start
+            )
+        first = int(next_tok[0, 0])
+        self.alloc.register_prefix(slot, prompt)
+        if stats is not None:
+            s = np.asarray(stats)
+            load = s if load is None else load + s
+        if self._emit_first(req, first):
+            self.alloc.release(slot)
+            return load
+        self.active[slot] = req
+        self.t[slot] = n
+        self.tokens[slot, 0] = first
+        return load
+
+    def _apply_forks(self, forks) -> None:
+        if forks:
+            src = jnp.asarray([f[0] for f in forks], jnp.int32)
+            dst = jnp.asarray([f[1] for f in forks], jnp.int32)
+            self.caches = _copy_pages(self.caches, src, dst)
+
+    def _run_chunk(self, slot: int, chunk: np.ndarray, pos: int):
+        """Run a decode-mode continuation chunk for one slot.  Paged mode
+        runs batch-1 against the shared pools through the slot's table row;
+        dense mode gathers/scatters the slot column."""
+        perm, wire = self._perm_args()
+        if self.paged:
+            next_tok, self.caches, stats = self._chunk_fn(
+                self.params,
+                self.caches,
+                jnp.asarray(chunk[None, :]),
+                jnp.asarray(pos, jnp.int32),
+                perm,
+                wire,
+                None,
+                jnp.asarray(self.alloc.table[slot : slot + 1]),
+            )
+            return next_tok, stats
+        next_tok, new, stats = self._chunk_fn(
+            self.params,
+            self._slot_caches(slot),
+            jnp.asarray(chunk[None, :]),
+            jnp.asarray(pos, jnp.int32),
+            perm,
+            wire,
+        )
+        self._scatter_slot(slot, new)
+        return next_tok, stats
+
     def _slot_caches(self, slot: int):
         return jax.tree.map(lambda c: c[:, slot : slot + 1], self.caches)
 
     def _scatter_slot(self, slot: int, new) -> None:
-        self.caches = jax.tree.map(
-            lambda full, n: full.at[:, slot].set(n[:, 0].astype(full.dtype)),
-            self.caches,
-            new,
+        self.caches = _scatter_slot_caches(
+            self.caches, new, jnp.asarray(slot, jnp.int32)
         )
 
     def _advance_prefill(self) -> tuple[int, np.ndarray | None]:
@@ -232,23 +401,23 @@ class ContinuousBatcher:
         if not self.prefilling:
             return 0, None
         pf = self.prefilling[0]
-        perm, wire = self._perm_args()
         chunk = pf.req.prompt[pf.pos : pf.pos + self.prefill_chunk]
-        next_tok, new, stats = self._chunk_fn(
-            self.params,
-            self._slot_caches(pf.slot),
-            jnp.asarray(chunk[None, :]),
-            jnp.asarray(pf.pos, jnp.int32),
-            perm,
-            wire,
-        )
-        self._scatter_slot(pf.slot, new)
+        if self.paged:
+            self._apply_forks(
+                self.alloc.ensure(pf.slot, pf.pos, pf.pos + len(chunk))
+            )
+        next_tok, stats = self._run_chunk(pf.slot, np.asarray(chunk), pf.pos)
         pf.pos += len(chunk)
         load = None if stats is None else np.asarray(stats)
         if pf.pos >= len(pf.req.prompt):
             self.prefilling.popleft()
+            if self.paged:
+                self.alloc.register_prefix(pf.slot, np.asarray(pf.req.prompt))
             first = int(next_tok[0, 0])
-            if not self._emit_first(pf.req, first):
+            if self._emit_first(pf.req, first):
+                if self.paged:
+                    self.alloc.release(pf.slot)
+            else:
                 self.active[pf.slot] = pf.req
                 self.t[pf.slot] = len(pf.req.prompt)
                 self.tokens[pf.slot, 0] = first
@@ -267,6 +436,15 @@ class ContinuousBatcher:
             perm, wire = self._perm_args()
             live_mask = np.zeros((self.slots, 1), np.float32)
             live_mask[live] = 1.0
+            page_table = None
+            if self.paged:
+                # Every live slot writes position t[s] this tick; fork any
+                # shared page in range and allocate fresh pages on demand.
+                for s in live:
+                    self._apply_forks(
+                        self.alloc.ensure(s, int(self.t[s]), int(self.t[s]) + 1)
+                    )
+                page_table = jnp.asarray(self.alloc.table)
             # The live mask serves two jobs (DESIGN.md §9): it weights the
             # exported MoE gate telemetry, and it suppresses K/V writes for
             # dead slots — without it the decode step would stomp a stale
@@ -280,6 +458,7 @@ class ContinuousBatcher:
                 perm,
                 wire,
                 jnp.asarray(live_mask),
+                page_table,
             )
             if stats is not None:
                 gate_load = np.asarray(stats)
@@ -299,6 +478,12 @@ class ContinuousBatcher:
                     finished += 1
                     self._finish(req)
                     self.active[s] = None
+                    if self.paged:
+                        self.alloc.release(s)
+        if self.paged:
+            self.kv_resident_pages_peak = max(
+                self.kv_resident_pages_peak, self.alloc.resident_pages()
+            )
         for extra in (pre_load, chunk_load):
             if extra is not None:
                 gate_load = extra if gate_load is None else gate_load + extra

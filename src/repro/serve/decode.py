@@ -15,6 +15,25 @@ from repro.train.train_step import make_prefill_step, make_serve_step
 
 __all__ = ["generate"]
 
+# Compiled prefill/decode steps, keyed by everything that changes the traced
+# program.  ``generate`` used to re-``jax.jit`` both steps per call, so every
+# generation paid tracing + compilation again even for identical configs —
+# with this cache, repeat calls (benchmark loops, tests, serving restarts)
+# reuse the jitted callables and only shape changes retrace.
+_STEP_CACHE: dict = {}
+
+
+def _compiled_steps(cfg, plan, mesh, sample):
+    key = (cfg, plan, mesh, bool(sample))
+    hit = _STEP_CACHE.get(key)
+    if hit is None:
+        hit = (
+            jax.jit(make_prefill_step(cfg, plan, mesh=mesh)),
+            jax.jit(make_serve_step(cfg, plan, mesh=mesh, sample=sample)),
+        )
+        _STEP_CACHE[key] = hit
+    return hit
+
 
 def generate(
     params,
@@ -30,8 +49,7 @@ def generate(
 ):
     """Prefill the prompt then decode ``max_new_tokens`` greedily/sampled."""
     b, s_prompt = prompt_tokens.shape
-    prefill = jax.jit(make_prefill_step(cfg, plan, mesh=mesh))
-    step = jax.jit(make_serve_step(cfg, plan, mesh=mesh, sample=sample))
+    prefill, step = _compiled_steps(cfg, plan, mesh, sample)
 
     batch = {"tokens": prompt_tokens, **(extra_batch or {})}
     next_tok, caches = prefill(params, batch)

@@ -67,6 +67,12 @@ class ServeConfig:
     use_copilot: bool = False
     sample: bool = False
     max_ticks: int = 10_000
+    # Paged KV cache (DESIGN.md §10).  None = auto (paged whenever the model
+    # supports it); False forces the dense per-slot ring buffer.
+    paged: bool | None = None
+    page_size: int = 16
+    num_pages: int = 0  # 0 = slots * ceil(max_len / page_size)
+    prefix_cache: bool = True
 
 
 @dataclasses.dataclass
@@ -93,6 +99,13 @@ class ServeReport:
     # cross-check in tests/test_serve.py.
     a2a_bytes: float
     gate_load_total: np.ndarray | None
+    # Paged-KV telemetry (zeros when running the dense ring buffer).
+    kv_paged: bool = False
+    kv_resident_pages_peak: int = 0
+    kv_pool_pages: int = 0
+    kv_prefix_hit_pages: int = 0
+    kv_cow_forks: int = 0
+    kv_evictions: int = 0
 
 
 class ServeEngine:
@@ -114,6 +127,8 @@ class ServeEngine:
         self.batcher = ContinuousBatcher(
             params, cfg, plan, slots=s.slots, max_len=s.max_len, mesh=mesh,
             prefill_chunk=s.prefill_chunk, sample=s.sample,
+            paged=s.paged, page_size=s.page_size, num_pages=s.num_pages,
+            prefix_cache=s.prefix_cache,
         )
         self.controlplane: ControlPlane | None = None
         self.applier: PlacementApplier | None = None
@@ -296,6 +311,20 @@ class ServeEngine:
             ),
             a2a_bytes=self.a2a_bytes,
             gate_load_total=self.gate_load_total,
+            kv_paged=self.batcher.paged,
+            kv_resident_pages_peak=self.batcher.kv_resident_pages_peak,
+            kv_pool_pages=(
+                self.batcher.num_pages if self.batcher.paged else 0
+            ),
+            kv_prefix_hit_pages=(
+                self.batcher.alloc.prefix_hit_pages if self.batcher.paged else 0
+            ),
+            kv_cow_forks=(
+                self.batcher.alloc.cow_forks if self.batcher.paged else 0
+            ),
+            kv_evictions=(
+                self.batcher.alloc.evictions if self.batcher.paged else 0
+            ),
         )
 
     # -- checkpoint round-trip (DESIGN.md §9) ---------------------------------

@@ -53,6 +53,14 @@ class TrafficMix:
     out_zipf_a: float = 1.1
     num_regions: int = 4
     region_zipf_a: float = 0.8  # request-origin skew across regions
+    # Agentic traces re-send the same system prompt / tool schema on every
+    # self-loop call: requests from one region share a common prompt prefix.
+    # ``shared_prefix_tokens`` is the per-region prefix length and
+    # ``shared_prefix_ratio`` the fraction of requests that carry it — the
+    # traffic shape the paged KV cache's prefix registry (DESIGN.md §10)
+    # turns into page reuse instead of recomputed prefill.
+    shared_prefix_tokens: int = 0
+    shared_prefix_ratio: float = 0.0
 
 
 # Named mixes the examples/benchmarks reference.  The shapes follow the
@@ -77,6 +85,15 @@ MIXES: dict[str, TrafficMix] = {
         out_min=16, out_max=128, out_zipf_a=0.9,
         num_regions=4, region_zipf_a=1.2,
     ),
+    # The agentic mix with the self-loop structure made explicit: ~90% of
+    # requests re-send their region's 64-token system prompt verbatim.
+    "agentic_shared": TrafficMix(
+        "agentic_shared", rate_rps=6.0, arrival="bursty", burst_factor=3.0,
+        prompt_min=80, prompt_max=256, prompt_zipf_a=1.0,
+        out_min=16, out_max=128, out_zipf_a=0.9,
+        num_regions=4, region_zipf_a=1.2,
+        shared_prefix_tokens=64, shared_prefix_ratio=0.9,
+    ),
 }
 
 
@@ -89,6 +106,7 @@ class SyntheticRequest:
     prompt_len: int
     max_new_tokens: int
     region: int
+    prefix_len: int = 0  # leading tokens shared with the region's prefix
 
 
 def _bounded_zipf(rng: np.random.Generator, a: float, lo: int, hi: int, n: int):
@@ -145,6 +163,15 @@ class WorkloadGenerator:
         rp = (np.arange(1, m.num_regions + 1) ** -m.region_zipf_a).astype(float)
         rp /= rp.sum()
         regions = rng.choice(m.num_regions, size=num_requests, p=rp)
+        # Shared prefixes (drawn only when configured, so mixes without them
+        # generate byte-identical streams to earlier versions).
+        if m.shared_prefix_tokens > 0:
+            carries = rng.random(num_requests) < m.shared_prefix_ratio
+            prefix_lens = np.where(
+                carries, np.minimum(m.shared_prefix_tokens, plens), 0
+            )
+        else:
+            prefix_lens = np.zeros(num_requests, np.int64)
         return [
             SyntheticRequest(
                 rid=i,
@@ -152,6 +179,7 @@ class WorkloadGenerator:
                 prompt_len=int(plens[i]),
                 max_new_tokens=int(olens[i]),
                 region=int(regions[i]),
+                prefix_len=int(prefix_lens[i]),
             )
             for i in range(num_requests)
         ]
@@ -161,9 +189,18 @@ class WorkloadGenerator:
 
         The leading token encodes the region so requests from the same region
         share a prefix — the correlation that concentrates gate load
-        per-region (paper §3's semantic locality, at toy scale).
+        per-region (paper §3's semantic locality, at toy scale).  When the mix
+        assigns the request a shared prefix (``req.prefix_len > 0``), the
+        first ``prefix_len`` tokens come from a region-seeded stream instead:
+        every carrying request from that region sends the identical system
+        prompt, which is what the paged cache's prefix registry deduplicates.
         """
         rng = np.random.default_rng((self.seed << 20) ^ req.rid)
         toks = rng.integers(0, self.vocab_size, size=req.prompt_len)
+        if req.prefix_len > 0:
+            prng = np.random.default_rng((self.seed << 20) ^ 0x5AFE ^ req.region)
+            toks[: req.prefix_len] = prng.integers(
+                0, self.vocab_size, size=req.prefix_len
+            )
         toks[0] = req.region % self.vocab_size
         return toks.astype(np.int32)

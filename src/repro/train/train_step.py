@@ -317,12 +317,12 @@ def make_prefill_chunk_step(cfg, plan: ShardingPlan, mesh=None, *, with_stats: b
 
     def chunk_step(
         params, caches, tokens, t, expert_perm=None, wire_perm=None,
-        gate_weights=None,
+        gate_weights=None, page_table=None,
     ):
         feats, aux, caches = tfm.model_apply(
             params, {"tokens": tokens}, cfg, plan, mesh=mesh, mode="decode",
             caches=caches, t=t, expert_perm=expert_perm, wire_perm=wire_perm,
-            gate_weights=gate_weights,
+            gate_weights=gate_weights, page_table=page_table,
         )
         logits = tfm.logits_from_features(params, feats[:, -1:], cfg)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -339,17 +339,19 @@ def make_serve_step(
 ):
     def serve_step(
         params, caches, tokens, t, rng=None, expert_perm=None, wire_perm=None,
-        gate_weights=None,
+        gate_weights=None, page_table=None,
     ):
         """One decode step: tokens [B,1] + caches -> next token [B,1].
 
         ``expert_perm``/``wire_perm`` are the runtime placement state the
         serving engine threads per tick; ``gate_weights`` its live-slot mask
-        for the exported gate-load telemetry (``with_stats``)."""
+        for the exported gate-load telemetry (``with_stats``);
+        ``page_table`` switches the caches onto the paged KV pool
+        (DESIGN.md §10)."""
         feats, aux, caches = tfm.model_apply(
             params, {"tokens": tokens}, cfg, plan, mesh=mesh, mode="decode",
             caches=caches, t=t, expert_perm=expert_perm, wire_perm=wire_perm,
-            gate_weights=gate_weights,
+            gate_weights=gate_weights, page_table=page_table,
         )
         logits = tfm.logits_from_features(params, feats, cfg)[:, -1]
         if sample and rng is not None:

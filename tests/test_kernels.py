@@ -6,7 +6,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (
+    flash_attention_pallas,
+    paged_flash_decode_pallas,
+)
 from repro.kernels.grouped_matmul import grouped_matmul_pallas, pick_block
 from repro.kernels.topk_gating import topk_gating_pallas
 
@@ -61,6 +64,65 @@ def test_flash_attention(case):
     out = flash_attention_pallas(q, k, v, bq=64, bk=64, interpret=True, **kw)
     expect = ref.flash_attention(q, k, v, **kw)
     assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
+
+
+@pytest.mark.parametrize(
+    "case",
+    [
+        # C=1 decode and C>1 chunked continuations, GQA and MQA, page sizes
+        # that do and don't divide the context, window and softcap on/off.
+        dict(b=2, c=1, hq=4, hkv=2, d=32, page=16, p=4, window=None, softcap=None),
+        dict(b=1, c=4, hq=4, hkv=1, d=64, page=8, p=6, window=None, softcap=30.0),
+        dict(b=3, c=1, hq=2, hkv=2, d=16, page=16, p=2, window=16, softcap=None),
+        dict(b=2, c=5, hq=6, hkv=3, d=32, page=8, p=8, window=24, softcap=25.0),
+    ],
+)
+def test_paged_flash_decode_bit_exact_vs_oracle(case):
+    """The acceptance gate for the paged decode kernel: interpret-mode pallas
+    output is BIT-identical to the kernels/ref.py oracle (same streaming
+    schedule), and allclose to a dense masked softmax over the gathered view."""
+    c = dict(case)
+    b, ch, hq, hkv, d, page, p = (
+        c["b"], c["c"], c["hq"], c["hkv"], c["d"], c["page"], c["p"]
+    )
+    n_pool = b * p + 3
+    kq, kk, kv, kt = jax.random.split(KEY, 4)
+    q = jax.random.normal(kq, (b, ch, hq, d), jnp.float32)
+    k_pool = jax.random.normal(kk, (n_pool, page, hkv, d), jnp.float32)
+    v_pool = jax.random.normal(kv, (n_pool, page, hkv, d), jnp.float32)
+    # Non-contiguous page ids; every sequence owns p distinct pool pages but
+    # entries past its used span are -1 (unallocated).
+    perm = jax.random.permutation(kt, n_pool)[: b * p].reshape(b, p)
+    lengths = jnp.asarray(
+        [(p * page - ch) - (i * page) // 2 for i in range(b)], jnp.int32
+    )
+    used = -(-(lengths + ch) // page)  # pages actually mapped
+    table = jnp.where(jnp.arange(p)[None, :] < used[:, None], perm, -1)
+    kw = dict(window=c["window"], softcap=c["softcap"])
+
+    out = paged_flash_decode_pallas(
+        q, k_pool, v_pool, table, lengths, interpret=True, **kw
+    )
+    oracle = ref.paged_flash_decode(q, k_pool, v_pool, table, lengths, **kw)
+    assert out.shape == (b, ch, hq, d)
+    assert float(jnp.max(jnp.abs(out - oracle))) == 0.0, c
+
+    # dense reference: full softmax over the contiguous gathered view
+    ck = ref.paged_gather_kv(k_pool, table)  # [B, P*page, Hkv, D]
+    cv = ref.paged_gather_kv(v_pool, table)
+    qg = q.reshape(b, ch, hkv, hq // hkv, d)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg * (d**-0.5), ck)
+    if c["softcap"]:
+        s = jnp.tanh(s / c["softcap"]) * c["softcap"]
+    q_pos = lengths[:, None, None, None, None] + jnp.arange(ch)[None, None, None, :, None]
+    k_pos = jnp.arange(p * page)[None, None, None, None, :]
+    mask = k_pos <= q_pos
+    if c["window"]:
+        mask &= k_pos > q_pos - c["window"]
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    expect = jnp.einsum("bkgcs,bskd->bckgd", w, cv).reshape(b, ch, hq, d)
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-5, c
 
 
 def test_flash_attention_chunked_matches_ref():

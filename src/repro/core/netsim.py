@@ -466,6 +466,12 @@ class ServingResult:
     kv_paged: bool = False
     kv_resident_tokens_peak: int = 0
     kv_budget_tokens: int = 0
+    # Speculative decoding (DESIGN.md §11): draft span, modeled per-token
+    # acceptance, and the resulting expected emitted tokens per verify round
+    # (1.0 = non-speculative).
+    spec_k: int = 0
+    spec_acceptance: float = 0.0
+    spec_tokens_per_round: float = 1.0
 
     def breakdown(self) -> dict:
         return dataclasses.asdict(self)
@@ -488,6 +494,7 @@ def simulate_serving(
     paged_kv: bool = False,
     kv_page_tokens: int = 16,
     kv_budget_tokens: int = 0,
+    spec_decode: tuple | None = None,
 ) -> ServingResult:
     """Price a continuous-batching serving run of ``model`` on ``fabric``.
 
@@ -515,11 +522,35 @@ def simulate_serving(
     head of the prefill queue until retiring requests release pages —
     exactly how :class:`repro.serve.paged.PageAllocator` gates the engine —
     so at equal HBM budget the paged run sustains more concurrent decodes.
+
+    **Speculative decoding** (``spec_decode=(K, acceptance_model)``,
+    DESIGN.md §11): each live slot verifies a K-token draft span per tick,
+    so one a2a launch (and one KV-cache streaming pass) amortizes over the
+    expected ``1 + sum(p^i)`` emitted tokens — while the verify a2a payload
+    and FLOPs scale with all K+1 positions and the draft pass adds K cheap
+    (attention + one expert-equivalent) steps that re-stream KV each step.
+    ``acceptance_model`` is the per-token draft acceptance probability
+    (i.i.d. model), or a callable ``f(K) -> expected accepted tokens``.
+    At low acceptance the extra positions/draft FLOPs are pure waste — the
+    goodput-per-dollar crossover against ``spec_decode=None`` is exactly
+    what ``benchmarks/run.py::spec_decode`` sweeps.
     """
     from repro.core import cost as costm
     from repro.serve.workload import WorkloadGenerator
 
     requests = WorkloadGenerator(mix, seed=seed).generate(num_requests)
+    spec_k, spec_acc, spec_emit = 0, 0.0, 1.0
+    if spec_decode is not None:
+        spec_k, acc_model = int(spec_decode[0]), spec_decode[1]
+        if spec_k > 0:
+            if callable(acc_model):
+                exp_acc = float(acc_model(spec_k))
+            else:
+                exp_acc = sum(float(acc_model) ** i for i in range(1, spec_k + 1))
+            spec_acc = exp_acc / spec_k
+            spec_emit = 1.0 + exp_acc  # + verify's correction/bonus token
+        else:
+            spec_k = 0
     region = num_servers_region or max(model.gpus_per_stage // gpus_per_server, 2)
     trace = GateTraceGenerator(model.layers_per_stage, model.num_experts, seed=seed)
     cp = (
@@ -632,8 +663,11 @@ def simulate_serving(
 
         # Per-layer phase pricing: the a2a moves every routed token copy of
         # the tick (live decode + prefill chunk) — the same byte formula the
-        # engine accounts (comm.ep_alltoall_bytes).
-        routed = n_live + pf_tokens
+        # engine accounts (comm.ep_alltoall_bytes).  Speculative ticks route
+        # the whole verify span (K+1 positions per live slot) through ONE
+        # launch per layer: payload scales with positions, launches don't.
+        vpos = n_live * (spec_k + 1) if spec_k else n_live
+        routed = vpos + pf_tokens
         tick_s = 0.0
         blocked_tick = 0.0
         if routed:
@@ -667,16 +701,34 @@ def simulate_serving(
             else:
                 kv_read_tokens = n_live * mean_ctx
             attn_t = max(
-                (2 * n_live * 4 * d * d + 2 * 2 * n_live * mean_ctx * d) / rate,
+                # Matmul/score FLOPs scale with every verified position; the
+                # KV HBM read does NOT — the whole span streams the cache
+                # once per round (the speculative amortization).
+                (2 * vpos * 4 * d * d + 2 * 2 * vpos * mean_ctx * d) / rate,
                 (kv_read_tokens * 2 * d * dt) / hbm,  # KV read
             )
             exp_t = max(
-                2 * n_live * k * 3 * d * dff / rate,
+                2 * vpos * k * 3 * d * dff / rate,
                 # dense-decode weight streaming: every expert's FFN weights
                 # transit HBM once per tick when any token is live.
                 (model.num_experts * 3 * d * dff * dt) / hbm,
             )
             pf_t = pf_tokens * (2 * 4 * d * d + 2 * k * 3 * d * dff) / rate
+            draft_t = 0.0
+            if spec_k and n_live:
+                # K draft steps: full attention + ONE expert-equivalent FFN
+                # per token (shared_only / topk1 drafts), each step
+                # re-streaming the live KV (serial steps can't amortize it)
+                # plus one expert's weights.  Rides the hideable window with
+                # the prefill chunk — wasted entirely when acceptance is low.
+                draft_t = spec_k * max(
+                    (
+                        2 * n_live * 4 * d * d
+                        + 2 * 2 * n_live * mean_ctx * d
+                        + 2 * n_live * 3 * d * dff
+                    ) / rate,
+                    (kv_read_tokens * 2 * d * dt + 3 * d * dff * dt) / hbm,
+                )
             if ticks % 8 == 0:
                 loads = trace.step()
             for li in range(layers):
@@ -693,7 +745,9 @@ def simulate_serving(
                     # inter-reconfiguration stretch (§5.1's rule at serving
                     # cadence).
                     window = (
-                        reconfig_every_ticks * layers * (attn_t + exp_t + pf_t)
+                        reconfig_every_ticks
+                        * layers
+                        * (attn_t + exp_t + pf_t + draft_t)
                     )
                     blocked_tick += cp.apply(
                         cp.plan(li, demand), hide_window=window
@@ -702,7 +756,7 @@ def simulate_serving(
                 t_comb = a2a_op.cost(fabric, demand.T)
                 total_t, exposed_t = overlap.decode_tick_phase(
                     t_disp, exp_t, t_comb, max(model.overlap_chunks, 1),
-                    attn=attn_t, prefill_compute=pf_t,
+                    attn=attn_t, prefill_compute=pf_t + draft_t,
                 )
                 tick_s += total_t
                 a2a_total_s += t_disp + t_comb
@@ -722,9 +776,13 @@ def simulate_serving(
         # finished prefills join the live set for the NEXT tick.
         still = []
         for it in live:
-            it[1] -= 1
-            it[2] += 1
-            tokens_out += 1
+            # Speculative rounds emit the expected accepted prefix + the
+            # verify correction/bonus token (flow level: the i.i.d.
+            # acceptance expectation), clamped to what the request needs.
+            emit = min(spec_emit, it[1]) if spec_k else 1
+            it[1] -= emit
+            it[2] += emit
+            tokens_out += emit
             if it[1] <= 0:
                 completed += 1
                 _kv_release(it[0])
@@ -761,7 +819,7 @@ def simulate_serving(
         sim_seconds=sim_seconds,
         requests=len(requests),
         completed=completed,
-        tokens_out=tokens_out,
+        tokens_out=int(round(tokens_out)),
         ttft_p50_s=pct(ttft, 50),
         ttft_p99_s=pct(ttft, 99),
         tpot_p50_s=pct(tpot, 50),
@@ -776,6 +834,9 @@ def simulate_serving(
         kv_paged=bool(paged_kv),
         kv_resident_tokens_peak=int(resident_peak),
         kv_budget_tokens=int(kv_budget_tokens),
+        spec_k=spec_k,
+        spec_acceptance=spec_acc,
+        spec_tokens_per_round=spec_emit,
     )
 
 

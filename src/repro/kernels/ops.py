@@ -130,7 +130,11 @@ def paged_flash_decode(
     ``q [B, C, Hq, D]`` against pools ``[N, page, Hkv, D]`` gathered via
     ``page_table [B, P]`` (i32 page ids, -1 = unallocated) with per-sequence
     ``lengths [B]``.  Both paths run the same streaming-softmax schedule, so
-    pallas-vs-ref is bit-exact (tested in interpret mode)."""
+    pallas-vs-ref is bit-exact (tested in interpret mode).  ``C > 1`` also
+    carries speculative verify spans (K drafted tokens + 1): bit-exactness
+    across C is what lets verify's rescoring reproduce the serial decode
+    rounding token for token (DESIGN.md §11), including the padded C=2
+    tile."""
     mode = _resolve_simple(backend)
     if mode == "pallas":
         return paged_flash_decode_pallas(

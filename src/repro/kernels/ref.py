@@ -226,9 +226,12 @@ def paged_flash_decode(
     definition: batching the dots or unrolling the page loop changes XLA's
     contraction/FMA-fusion choices and drifts from the interpret-mode kernel
     by ~1 ulp per page, while this loop form is bit-exact (asserted
-    ``== 0.0`` in the tests).  Models read paged caches off-TPU through a
-    dense gathered view instead (see ``models/layers.py``); this function is
-    the kernel's semantics of record.
+    ``== 0.0`` in the tests — including the C in {1, 2, 4} speculative
+    verify-span widths; the kernel pads its C=2 tile to 4 because a 2-row
+    dot picks a different XLA contraction strategy).  Models read paged
+    caches off-TPU through a dense gathered view instead (see
+    ``models/layers.py``); this function is the kernel's semantics of
+    record.
     """
     b, c, hq, d = q.shape
     _, page, hkv, _ = k_pool.shape

@@ -55,6 +55,13 @@ class MoEConfig:
     # mixnet backend then runs the EP all-to-all (with wire perms) for every
     # decode tick, the serving engine's EP-sharded decode path.
     decode_backend: str = "dense"
+    # Speculative-decoding draft pass (DESIGN.md §11): same weights, cheaper
+    # routed fan-out.  "off" = the full model; "topk1" narrows routing to the
+    # single best expert per token; "shared_only" skips the routed experts
+    # entirely (shared-expert + attention only — free when
+    # num_shared_experts > 0).  Being part of the frozen config makes the
+    # draft step a *separate jit program* from the verify step.
+    draft_mode: str = "off"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,6 +249,7 @@ class ModelConfig:
             assert self.moe.dispatch in ("dropless", "capacity")
             assert self.moe.overlap_chunks >= 1
             assert self.moe.decode_backend in ("dense", "sparse")
+            assert self.moe.draft_mode in ("off", "topk1", "shared_only")
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

@@ -66,6 +66,8 @@ assigned architecture (grok-1: 8 experts -> 16 virtual on a 16-wide axis).
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -77,7 +79,10 @@ from repro.models import routing
 from repro.models.routing import MoEStats, router_losses
 from repro.parallel.sharding import ShardingPlan, constrain, shard_map, virtual_experts
 
-__all__ = ["init_moe", "moe_apply", "MoEStats", "router_losses"]
+__all__ = [
+    "init_moe", "moe_apply", "MoEStats", "router_losses",
+    "resolve_draft_mode", "draft_config",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -636,6 +641,19 @@ def moe_apply(
     serving engine's live-slot mask, so the exported expert load counts only
     occupied decode slots (DESIGN.md §9)."""
     e = cfg.moe
+    if e.draft_mode == "topk1" and e.top_k > 1:
+        # Speculative draft (DESIGN.md §11): narrow the routed fan-out to the
+        # gate's single best expert.  Rewriting the frozen config keeps every
+        # backend below unchanged; the draft step jit-compiles separately
+        # because the config is its static key.
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(
+                e, top_k=routing.effective_top_k(e.top_k, e.draft_mode),
+                draft_mode="off",
+            ),
+        )
+        e = cfg.moe
     backend = backend or e.backend
     if backend != "einsum" and (x.shape[1] == 1 or mode == "decode"):
         # Single-token decode: weight-stationary dense path (see docstring)
@@ -652,7 +670,17 @@ def moe_apply(
         wire = jnp.asarray(wire_perm, jnp.int32)
         perm = wire[perm // epd] * epd + perm % epd
         wire_perm = None
-    if backend == "dense_decode":
+    if e.draft_mode == "shared_only":
+        # Speculative draft with only the always-on lane: skip the routed
+        # experts (and their dispatch a2a) entirely.  Zero routed output plus
+        # the shared-expert addition below; telemetry exports a zero load so
+        # draft passes never perturb the control plane's gate statistics.
+        zero = jnp.zeros((), jnp.float32)
+        out = jnp.zeros_like(x)
+        stats = MoEStats(
+            jnp.zeros((e.num_experts,), jnp.float32), zero, zero, zero
+        )
+    elif backend == "dense_decode":
         out, stats = _moe_dense_decode(
             params, x, cfg, plan, mesh=mesh, expert_perm=perm,
             gate_weights=gate_weights,
@@ -672,3 +700,35 @@ def moe_apply(
         g = jax.nn.silu(x @ sh["w_gate"])
         out = out + (g * h) @ sh["w_out"]
     return out, stats
+
+
+# ---------------------------------------------------------------------------
+# speculative drafts (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def resolve_draft_mode(cfg, mode: str = "auto") -> str:
+    """Pick the cheap draft pass for speculative decoding.
+
+    ``auto`` prefers ``shared_only`` when the model has an always-on shared
+    lane (the draft is then a dense sub-network of the full model) and falls
+    back to ``topk1`` for pure sparse MoEs; non-MoE models have no cheaper
+    self-draft, so the draft IS the target model (``off`` — acceptance 1.0).
+    """
+    if mode != "auto":
+        return mode
+    if not cfg.is_moe:
+        return "off"
+    return "shared_only" if cfg.moe.num_shared_experts > 0 else "topk1"
+
+
+def draft_config(cfg, mode: str = "auto"):
+    """The draft-model config: same weights, ``draft_mode`` set on the MoE
+    block.  A distinct frozen config means the draft step is its own jit
+    program (Kossmann et al.: bucket the specializations, don't re-jit)."""
+    mode = resolve_draft_mode(cfg, mode)
+    if mode == "off" or not cfg.is_moe:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, draft_mode=mode)
+    )

@@ -42,6 +42,7 @@ __all__ = [
     "RoutingInfo",
     "DispatchPlan",
     "compute_routing",
+    "effective_top_k",
     "resolve_perm",
     "router_losses",
     "expert_load",
@@ -99,6 +100,22 @@ class DispatchPlan:
 # ---------------------------------------------------------------------------
 
 
+def effective_top_k(top_k: int, draft_mode: str = "off") -> int:
+    """Routed choices per token under a speculative draft mode (DESIGN.md §11).
+
+    ``topk1`` narrows the gate to its single best expert; ``shared_only``
+    routes nothing (the draft is attention + shared experts — callers must
+    skip routing entirely, so 0 is returned as a sentinel, not a valid
+    ``top_k``).  Engines use this for a2a accounting: draft tokens pay
+    ``effective_top_k`` choices on the wire, verify tokens the full ``top_k``.
+    """
+    if draft_mode == "topk1":
+        return min(top_k, 1)
+    if draft_mode == "shared_only":
+        return 0
+    return top_k
+
+
 def compute_routing(
     logits: jax.Array,
     *,
@@ -107,6 +124,7 @@ def compute_routing(
     replication: int,
     expert_perm: jax.Array | None = None,
     renormalize: bool = True,
+    draft_mode: str = "off",
 ) -> RoutingInfo:
     """Top-k gate + virtual-slot destination map for ``[T, E]`` logits.
 
@@ -114,8 +132,12 @@ def compute_routing(
     expert, re-addressed by the layer's ``expert_perm`` (virtual expert ->
     physical slot, the OCS cross-map analogue); ``wfull`` repeats the full
     combine weight per shard (row-split matmul partials sum under one
-    weight).
+    weight).  ``draft_mode`` narrows the fan-out for speculative draft
+    passes (``shared_only`` callers bypass routing and must not land here).
     """
+    top_k = effective_top_k(top_k, draft_mode)
+    if top_k <= 0:
+        raise ValueError("shared_only drafts skip routing entirely")
     t = logits.shape[0]
     weights, idx = ops.topk_gating(logits, top_k)
     if renormalize:

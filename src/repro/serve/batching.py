@@ -53,15 +53,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import moe as moe_mod
 from repro.models import transformer as tfm
 from repro.serve.paged import PageAllocator
 from repro.train.train_step import (
+    make_draft_loop_step,
     make_prefill_chunk_step,
     make_prefill_step,
     make_serve_step,
+    make_verify_step,
 )
 
 __all__ = ["ContinuousBatcher", "Request", "TickStats"]
+
+
+@jax.jit
+def _fold_slot_keys(base, rids, counts):
+    """Per-slot sample keys: ``fold_in(fold_in(base, rid), emitted_index)``.
+
+    The per-VERIFIED-token key discipline (DESIGN.md §11): the key stream is
+    a pure function of (request, output position), so speculative and serial
+    decode consume identical keys regardless of how many draft attempts were
+    burned getting there.
+    """
+    k1 = jax.vmap(jax.random.fold_in, (None, 0))(base, rids)
+    return jax.vmap(jax.random.fold_in)(k1, counts)  # [B, 2]
+
+
+@jax.jit
+def _fold_span_keys(base, rids, starts, offsets):
+    """[B, C, 2] keys for a C-token span starting at each slot's next
+    emitted-token index (one jit specialization per span length C)."""
+    k1 = jax.vmap(jax.random.fold_in, (None, 0))(base, rids)
+
+    def row(k, s):
+        return jax.vmap(lambda o: jax.random.fold_in(k, s + o))(offsets)
+
+    return jax.vmap(row)(k1, starts)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -138,6 +166,10 @@ class TickStats:
     admitted: int
     finished: int
     gate_load: np.ndarray | None  # [repeats, E] live-slot expert loads
+    # Speculative round telemetry (DESIGN.md §11) — all zero on plain ticks.
+    spec_drafted: int = 0  # draft tokens proposed (live slots x span k)
+    spec_accepted: int = 0  # draft tokens accepted AND emitted
+    spec_verified: int = 0  # positions the FULL model scored (live x (k+1))
 
 
 class ContinuousBatcher:
@@ -158,6 +190,9 @@ class ContinuousBatcher:
         page_size: int = 16,
         num_pages: int = 0,
         prefix_cache: bool = True,
+        spec_k: int = 0,
+        spec_draft_mode: str = "auto",
+        sample_seed: int = 0,
     ):
         self.params = params
         self.cfg = cfg
@@ -166,6 +201,10 @@ class ContinuousBatcher:
         self.slots = slots
         self.max_len = max_len
         self.prefill_chunk = int(prefill_chunk)
+        self.sample = bool(sample)
+        self.sample_seed = int(sample_seed)
+        self._base_key = jax.random.PRNGKey(self.sample_seed) if self.sample else None
+        self.spec_k = int(spec_k)
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
         self.t = np.zeros(slots, np.int32)  # next write position per slot
@@ -212,6 +251,32 @@ class ContinuousBatcher:
             if self.prefill_chunk > 0 or self.paged
             else None
         )
+        # Speculative decoding (DESIGN.md §11): draft k tokens with the cheap
+        # same-weights config, verify all k+1 positions in ONE chunked step.
+        # Drafts append into the SAME paged pool, so rejection is a length
+        # truncation — the dense ring buffer has no such invariant, hence the
+        # paged requirement.
+        self.draft_mode = "off"
+        self._verify_fn = None
+        self._draft_cfg = None
+        self._draft_fns: dict[int, object] = {}  # span k -> jitted draft loop
+        if self.spec_k > 0:
+            if not self.paged:
+                raise ValueError(
+                    "speculative decoding requires the paged KV cache "
+                    "(pass paged=True / a paged-capable model)"
+                )
+            self.draft_mode = moe_mod.resolve_draft_mode(cfg, spec_draft_mode)
+            self._draft_cfg = moe_mod.draft_config(cfg, spec_draft_mode)
+            self._verify_fn = jax.jit(
+                make_verify_step(
+                    cfg, plan, mesh=mesh, sample=sample, with_stats=True
+                ),
+                donate_argnums=(1,),
+            )
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_rounds = 0
         self.prefilling: deque[_Prefill] = deque()
         self.finished: list[Request] = []
         self.tick = 0
@@ -276,8 +341,12 @@ class ContinuousBatcher:
                 continue
             plan_a = None
             if self.paged:
+                # Speculative spans may overshoot max_new by up to spec_k
+                # draft positions before the rejected tail is truncated, so
+                # admission reserves that headroom too (usually 0-1 pages).
                 plan_a = self.alloc.admit(
-                    slot, req.prompt, req.max_new_tokens, self.max_len
+                    slot, req.prompt, req.max_new_tokens + self.spec_k,
+                    self.max_len,
                 )
                 if plan_a is None:
                     # Pool cannot cover the request yet; keep FIFO order and
@@ -423,16 +492,40 @@ class ContinuousBatcher:
                 self.tokens[pf.slot, 0] = first
         return len(chunk), load
 
+    def _span_keys(self, c: int):
+        """[slots, c, 2] sample keys for a c-token span: slot s's key j is
+        ``fold(fold(base, rid), len(out) + j)`` — the per-verified-token
+        discipline that makes speculative and serial sampling identical."""
+        rids = np.zeros(self.slots, np.int32)
+        starts = np.zeros(self.slots, np.int32)
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is not None:
+                rids[s] = req.rid
+                starts[s] = len(req.out)
+        return _fold_span_keys(
+            self._base_key,
+            jnp.asarray(rids),
+            jnp.asarray(starts),
+            jnp.arange(c, dtype=jnp.int32),
+        )
+
     # -- one decode tick -------------------------------------------------------
     def step(self) -> TickStats:
-        """Admit, advance one prefill chunk, decode one token for every
-        active slot, evict finished.  Returns the tick's observations."""
+        """Admit, advance one prefill chunk, decode one token (or one
+        speculative draft/verify round) for every active slot, evict
+        finished.  Returns the tick's observations."""
         admitted, pre_load = self._admit()
         prefill_tokens, chunk_load = self._advance_prefill()
         live = [s for s in range(self.slots) if self.active[s] is not None]
         finished = 0
         gate_load = None
-        if live:
+        spec_drafted = spec_accepted = spec_verified = 0
+        if live and self.spec_k > 0:
+            finished, gate_load, spec_drafted, spec_accepted, spec_verified = (
+                self._spec_tick(live)
+            )
+        elif live:
             perm, wire = self._perm_args()
             live_mask = np.zeros((self.slots, 1), np.float32)
             live_mask[live] = 1.0
@@ -445,6 +538,7 @@ class ContinuousBatcher:
                         self.alloc.ensure(s, int(self.t[s]), int(self.t[s]) + 1)
                     )
                 page_table = jnp.asarray(self.alloc.table)
+            rng = self._span_keys(1)[:, 0] if self.sample else None
             # The live mask serves two jobs (DESIGN.md §9): it weights the
             # exported MoE gate telemetry, and it suppresses K/V writes for
             # dead slots — without it the decode step would stomp a stale
@@ -454,7 +548,7 @@ class ContinuousBatcher:
                 self.caches,
                 jnp.asarray(self.tokens),
                 jnp.asarray(self.t),
-                None,
+                rng,
                 perm,
                 wire,
                 jnp.asarray(live_mask),
@@ -494,7 +588,125 @@ class ContinuousBatcher:
             admitted=admitted,
             finished=finished,
             gate_load=gate_load,
+            spec_drafted=spec_drafted,
+            spec_accepted=spec_accepted,
+            spec_verified=spec_verified,
         )
+
+    def _spec_tick(self, live):
+        """One speculative draft/verify round (DESIGN.md §11).
+
+        Draft the next k tokens per live slot with the cheap config (one
+        fused ``lax.scan`` launch), then score all k+1 continuation
+        positions with the FULL model in one chunked verify launch.  The
+        accepted prefix — the longest run where draft and verify agree,
+        plus verify's token at the first disagreement (serial decode's
+        correction; a bonus token when everything matched) — is bit-exact
+        what non-speculative decode would have emitted, greedy or sampled
+        (verify samples with the same per-verified-token keys serial decode
+        would have used).  Rejected tail positions hold orphaned K/V: the
+        slot's length simply doesn't advance over them, and whole now-unused
+        pages go straight back to the allocator's free list.
+        """
+        perm, wire = self._perm_args()
+        # Uniform span: clamp k so every live slot's k+1 writes stay inside
+        # the page table.  One compiled program per span length (Kossmann et
+        # al.: bucket specializations); steady-state ticks all use k=spec_k.
+        k = self.spec_k
+        for s in live:
+            k = min(k, self.max_len - 1 - int(self.t[s]))
+        k = max(k, 0)
+        c = k + 1
+        # Draft writes t..t+k-1, verify rewrites t..t+k: make the whole span
+        # privately writable up front (CoW forks + fresh pages, drawing on
+        # the spec_k admission headroom).
+        for s in live:
+            self._apply_forks(
+                self.alloc.ensure(s, int(self.t[s]), int(self.t[s]) + c)
+            )
+        page_table = jnp.asarray(self.alloc.table)
+        t_vec = jnp.asarray(self.t)
+        live_mask = np.zeros((self.slots, c), np.float32)
+        live_mask[live] = 1.0
+        span_keys = self._span_keys(c) if self.sample else None
+        tokens = np.zeros((self.slots, c), np.int32)
+        tokens[:, 0] = self.tokens[:, 0]
+        draft_np = None
+        if k > 0:
+            draft_fn = self._draft_fns.get(k)
+            if draft_fn is None:
+                draft_fn = jax.jit(
+                    make_draft_loop_step(
+                        self._draft_cfg, self.plan, mesh=self.mesh, k=k,
+                        sample=self.sample,
+                    ),
+                    donate_argnums=(1,),
+                )
+                self._draft_fns[k] = draft_fn
+            drafts, self.caches = draft_fn(
+                self.params,
+                self.caches,
+                jnp.asarray(self.tokens),
+                t_vec,
+                None if span_keys is None else span_keys[:, :k],
+                perm,
+                wire,
+                jnp.asarray(live_mask[:, :1]),
+                page_table,
+            )
+            draft_np = np.asarray(drafts)
+            tokens[:, 1:] = draft_np
+        toks, self.caches, stats = self._verify_fn(
+            self.params,
+            self.caches,
+            jnp.asarray(tokens),
+            t_vec,
+            span_keys,
+            perm,
+            wire,
+            jnp.asarray(live_mask),
+            page_table,
+        )
+        gate_load = None if stats is None else np.asarray(stats)
+        v = np.asarray(toks)
+        finished = 0
+        drafted = k * len(live)
+        accepted = 0
+        for s in live:
+            req = self.active[s]
+            a = 0
+            while a < k and draft_np[s, a] == v[s, a]:
+                a += 1
+            emit = [int(x) for x in v[s, : a + 1]]
+            # EOS inside the accepted span: stop AT the EOS and discard the
+            # tail — post-EOS positions were verified but must not be
+            # emitted (they'd never exist in serial decode).
+            if req.eos_id is not None and req.eos_id in emit:
+                emit = emit[: emit.index(req.eos_id) + 1]
+            emit = emit[: req.max_new_tokens - len(req.out)]
+            accepted += min(len(emit), a)
+            req.out.extend(emit)
+            self.t[s] += len(emit)
+            self.tokens[s, 0] = emit[-1]
+            done = (
+                len(req.out) >= req.max_new_tokens
+                or (req.eos_id is not None and emit[-1] == req.eos_id)
+                or self.t[s] >= self.max_len
+            )
+            if done:
+                finished += 1
+                self._finish(req)
+                self.active[s] = None
+                self.alloc.release(s)
+            elif len(emit) < c:
+                # Rejected/cut tail: whole pages past the accepted length go
+                # straight back to the free list and the slot's reservation
+                # is restored (PageAllocator.truncate).
+                self.alloc.truncate(s, int(self.t[s]))
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_rounds += 1
+        return finished, gate_load, drafted, accepted, c * len(live)
 
     @property
     def busy(self) -> bool:

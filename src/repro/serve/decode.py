@@ -56,10 +56,19 @@ def generate(
     caches = tfm.pad_caches(caches, s_prompt + max_new_tokens)
 
     out = [next_tok]
-    rng = jax.random.PRNGKey(seed)
+    # Per-(row, emitted-index) keys — the same sampling-key discipline the
+    # serving engine uses (DESIGN.md §11): key = fold(fold(base, row), n).
+    # A pure function of position, so any decode schedule (serial here,
+    # speculative in the engine) draws identical tokens.
+    base = jax.random.PRNGKey(seed)
+    row_keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        base, jnp.arange(b, dtype=jnp.int32)
+    )
     tok = next_tok
     for i in range(max_new_tokens - 1):
-        rng, sub = jax.random.split(rng)
+        sub = jax.vmap(jax.random.fold_in)(
+            row_keys, jnp.full((b,), i + 1, jnp.int32)
+        )
         tok, caches = step(params, caches, tok, jnp.asarray(s_prompt + i), sub)
         out.append(tok)
     return jnp.concatenate(out, axis=1)

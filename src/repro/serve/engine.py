@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import commruntime as comm
 from repro.core.controlplane import ControlPlane, LayerPlan, PlacementApplier
+from repro.models import routing
 from repro.parallel.sharding import ShardingPlan, virtual_experts
 from repro.serve.batching import ContinuousBatcher, Request, TickStats
 from repro.serve.workload import SyntheticRequest, WorkloadGenerator
@@ -73,6 +74,16 @@ class ServeConfig:
     page_size: int = 16
     num_pages: int = 0  # 0 = slots * ceil(max_len / page_size)
     prefix_cache: bool = True
+    # Speculative decoding (DESIGN.md §11): draft up to spec_k tokens per
+    # slot per tick with the cheap same-weights pass and verify them in one
+    # chunked full-model step.  0 = off.  Requires the paged KV cache.
+    spec_k: int = 0
+    # Draft pass: "auto" (shared_only when the model has shared experts,
+    # else topk1), or an explicit MoEConfig.draft_mode value.
+    spec_draft_mode: str = "auto"
+    # Base seed for the per-(request, emitted-token) sampling keys (only
+    # used when sample=True).
+    sample_seed: int = 0
 
 
 @dataclasses.dataclass
@@ -106,6 +117,13 @@ class ServeReport:
     kv_prefix_hit_pages: int = 0
     kv_cow_forks: int = 0
     kv_evictions: int = 0
+    # Speculative-decoding telemetry (DESIGN.md §11; zeros when spec_k=0).
+    spec_k: int = 0
+    spec_drafted: int = 0  # draft tokens proposed across the run
+    spec_accepted: int = 0  # draft tokens accepted and emitted
+    spec_acceptance: float = 0.0  # accepted / drafted
+    draft_truncations: int = 0  # rejected-tail truncations applied
+    pages_reclaimed: int = 0  # whole pages freed immediately by truncation
 
 
 class ServeEngine:
@@ -128,7 +146,15 @@ class ServeEngine:
             params, cfg, plan, slots=s.slots, max_len=s.max_len, mesh=mesh,
             prefill_chunk=s.prefill_chunk, sample=s.sample,
             paged=s.paged, page_size=s.page_size, num_pages=s.num_pages,
-            prefix_cache=s.prefix_cache,
+            prefix_cache=s.prefix_cache, spec_k=s.spec_k,
+            spec_draft_mode=s.spec_draft_mode, sample_seed=s.sample_seed,
+        )
+        # Draft tokens pay a narrower routed fan-out on the wire (0 for
+        # shared_only drafts — no dispatch a2a at all).
+        self._draft_top_k = (
+            routing.effective_top_k(cfg.moe.top_k, self.batcher.draft_mode)
+            if cfg.is_moe and s.spec_k > 0
+            else 0
         )
         self.controlplane: ControlPlane | None = None
         self.applier: PlacementApplier | None = None
@@ -218,10 +244,19 @@ class ServeEngine:
         realized gate loads into the control plane, and (on cadence) apply
         placement plans before the next tick."""
         stats = self.batcher.step()
-        served = stats.live + stats.prefill_tokens
+        # Full-model routed positions: one per live slot on plain ticks, the
+        # whole verify span on speculative ticks (the a2a launch amortizes
+        # over the span, but its payload still scales with positions).
+        decode_routed = stats.spec_verified if stats.spec_verified else stats.live
+        served = decode_routed + stats.prefill_tokens
         if served and self._moe_layers:
             self.a2a_bytes += self._moe_layers * comm.ep_alltoall_bytes(
                 served, self.cfg.moe.top_k, self.cfg.d_model, self._dtype_bytes
+            )
+        if stats.spec_drafted and self._moe_layers and self._draft_top_k:
+            self.a2a_bytes += self._moe_layers * comm.ep_alltoall_bytes(
+                stats.spec_drafted, self._draft_top_k, self.cfg.d_model,
+                self._dtype_bytes,
             )
         self._observe(stats)
         self._maybe_reconfigure()
@@ -324,6 +359,18 @@ class ServeEngine:
             ),
             kv_evictions=(
                 self.batcher.alloc.evictions if self.batcher.paged else 0
+            ),
+            spec_k=self.batcher.spec_k,
+            spec_drafted=self.batcher.spec_drafted,
+            spec_accepted=self.batcher.spec_accepted,
+            spec_acceptance=(
+                self.batcher.spec_accepted / max(self.batcher.spec_drafted, 1)
+            ),
+            draft_truncations=(
+                self.batcher.alloc.draft_truncations if self.batcher.paged else 0
+            ),
+            pages_reclaimed=(
+                self.batcher.alloc.pages_reclaimed if self.batcher.paged else 0
             ),
         )
 

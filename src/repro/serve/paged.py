@@ -74,6 +74,8 @@ class PageAllocator:
         self.cow_forks = 0
         self.evictions = 0
         self.allocs = 0
+        self.draft_truncations = 0
+        self.pages_reclaimed = 0
 
     # -- capacity --------------------------------------------------------
 
@@ -230,3 +232,63 @@ class PageAllocator:
                 self._decref(pid)
                 self.table[slot, j] = -1
         self._reserved[slot] = 0
+
+    def truncate(self, slot: int, new_len: int) -> int:
+        """Shrink ``slot`` to ``new_len`` positions, freeing orphaned pages
+        IMMEDIATELY (DESIGN.md §11).
+
+        Speculative rejection is just this truncation: pages are append-only
+        per owner, so a rejected draft tail leaves whole now-unused pages
+        past ``ceil(new_len / page)`` — they go straight back to the free
+        list (not through LRU; they hold garbage K/V nobody can ever read,
+        masked by the owner's length).  Each unmapped page restores one unit
+        of the slot's admission reservation: the slot will allocate that
+        page again as decode advances, and the reservation invariant (an
+        admitted request never deadlocks on an exhausted pool) must survive
+        truncation.  Returns the number of pages returned to the free list.
+        """
+        freed = 0
+        for j in range(-(-new_len // self.page), self.max_pages):
+            pid = int(self.table[slot, j])
+            if pid < 0:
+                continue
+            before = len(self._free)
+            self._decref(pid)
+            self.table[slot, j] = -1
+            self._reserved[slot] += 1
+            if len(self._free) > before:
+                freed += 1
+        self.draft_truncations += 1
+        self.pages_reclaimed += freed
+        return freed
+
+    # -- invariants ------------------------------------------------------
+
+    def check_leaks(self) -> None:
+        """Assert the pool is exactly partitioned: every page is either on
+        the free list (refcount 0, unmapped) or resident with a refcount
+        equal to its holder count (slot table rows + registry entry).  The
+        speculative tick loop calls this in tests after EVERY tick — a
+        truncation that forgot a decref, or freed a page a table row still
+        maps, fails here immediately."""
+        held = np.zeros(self.num_pages, np.int64)
+        for s in range(self.slots):
+            for j in range(self.max_pages):
+                pid = int(self.table[s, j])
+                if pid >= 0:
+                    held[pid] += 1
+        for pid in self._page_hash:
+            held[pid] += 1
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate pages on the free list"
+        for pid in range(self.num_pages):
+            if pid in free:
+                assert held[pid] == 0 and self.refcount[pid] == 0, (
+                    f"page {pid} on the free list but held/referenced"
+                )
+            else:
+                assert held[pid] == int(self.refcount[pid]) and held[pid] > 0, (
+                    f"page {pid}: refcount {int(self.refcount[pid])} != "
+                    f"{int(held[pid])} holders"
+                )
+        assert len(self._free) + self.resident_pages() == self.num_pages

@@ -32,7 +32,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["TrafficMix", "MIXES", "SyntheticRequest", "WorkloadGenerator"]
+__all__ = ["TrafficMix", "MIXES", "SyntheticRequest", "WorkloadGenerator",
+           "clamp_requests"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +108,37 @@ class SyntheticRequest:
     max_new_tokens: int
     region: int
     prefix_len: int = 0  # leading tokens shared with the region's prefix
+
+
+def clamp_requests(
+    reqs: list["SyntheticRequest"],
+    *,
+    prompt_max: int | None = None,
+    max_new: int | None = None,
+    arrival_s: float | None = None,
+) -> list["SyntheticRequest"]:
+    """Benchmark-shape a generated stream: cap prompt lengths, pin output
+    budgets and/or arrivals, preserving every distributional property the
+    caps don't touch.
+
+    The decode benchmarks (``paged_decode``, ``spec_decode``) want the mix's
+    region/prefix structure but a decode-heavy shape (short prompts, fixed
+    generation budget, no arrival gaps).  Clamping ``prompt_len`` keeps the
+    materialized tokens a PREFIX of the unclamped prompt
+    (:meth:`WorkloadGenerator.prompt_tokens` draws sequentially from the
+    same streams), and ``prefix_len`` is re-clamped so the shared-prefix
+    invariant ``prefix_len <= prompt_len`` survives aggressive caps."""
+    out = []
+    for r in reqs:
+        plen = min(r.prompt_len, prompt_max) if prompt_max else r.prompt_len
+        out.append(dataclasses.replace(
+            r,
+            prompt_len=plen,
+            prefix_len=min(r.prefix_len, plen),
+            max_new_tokens=max_new if max_new is not None else r.max_new_tokens,
+            arrival_s=arrival_s if arrival_s is not None else r.arrival_s,
+        ))
+    return out
 
 
 def _bounded_zipf(rng: np.random.Generator, a: float, lo: int, hi: int, n: int):

@@ -37,10 +37,26 @@ __all__ = [
     "make_prefill_step",
     "make_prefill_chunk_step",
     "make_serve_step",
+    "make_verify_step",
+    "make_draft_loop_step",
     "init_ef_residual",
     "loss_fn",
     "step_shardings",
 ]
+
+
+def _sample_rows(logits, keys):
+    """Per-row Gumbel-argmax sample: ``[B, V]`` logits × ``[B, 2]`` keys.
+
+    Equivalent to ``categorical`` per row, but each row consumes its OWN key
+    — the serving engine's sampling-key discipline (DESIGN.md §11): one key
+    per (slot, emitted-token index), so speculative and serial decode draw
+    the same token from the same logits, and draft passes can reuse the
+    verify keys (common random numbers) for free extra acceptance.
+    """
+    l32 = logits.astype(jnp.float32)
+    g = jax.vmap(lambda k: jax.random.gumbel(k, l32.shape[-1:]))(keys)
+    return jnp.argmax(l32 + g, axis=-1)
 
 
 def loss_fn(params, batch, cfg, plan, mesh=None, expert_perm=None, wire_perm=None):
@@ -355,7 +371,10 @@ def make_serve_step(
         )
         logits = tfm.logits_from_features(params, feats, cfg)[:, -1]
         if sample and rng is not None:
-            next_tok = jax.random.categorical(rng, logits.astype(jnp.float32))
+            if rng.ndim == 2:  # [B, 2] per-slot keys (DESIGN.md §11)
+                next_tok = _sample_rows(logits, rng)
+            else:  # legacy single key for the whole batch (decode.generate)
+                next_tok = jax.random.categorical(rng, logits.astype(jnp.float32))
         else:
             next_tok = jnp.argmax(logits, axis=-1)
         next_tok = next_tok.astype(jnp.int32)[:, None]
@@ -364,6 +383,119 @@ def make_serve_step(
         return next_tok, caches
 
     return serve_step
+
+
+def make_verify_step(
+    cfg, plan: ShardingPlan, mesh=None, *, sample: bool = False,
+    with_stats: bool = False,
+):
+    """Speculative VERIFY step (DESIGN.md §11): score a ``[B, C]`` causal
+    continuation in one pass and emit the target model's token at EVERY
+    position.
+
+    Generalizes ``make_prefill_chunk_step`` from last-position-only to
+    all-position outputs: position ``j`` of the chunk consumes token ``j``
+    (the previous accepted token at ``j=0``, draft token ``j`` otherwise),
+    attention overwrites cache positions ``t .. t+C-1`` with FULL-model K/V
+    (the draft's approximate K/V at those positions is never read again),
+    and ``tokens[:, j]`` of the result is what serial decode would emit
+    after consuming the chunk prefix ``.. j`` — so the longest prefix where
+    draft and verify agree, plus verify's first disagreeing token, is
+    bit-exact serial decode.  ``rng``: ``[B, C, 2]`` per-(slot, position)
+    sample keys under the per-verified-token key discipline.
+    """
+    bad = [
+        k for k in (*cfg.block_pattern, *cfg.tail_pattern)
+        if k not in ("global", "local")
+    ]
+    if bad:
+        raise ValueError(
+            f"speculative verify needs attention-only block patterns, got {bad}"
+        )
+
+    def verify_step(
+        params, caches, tokens, t, rng=None, expert_perm=None, wire_perm=None,
+        gate_weights=None, page_table=None,
+    ):
+        feats, aux, caches = tfm.model_apply(
+            params, {"tokens": tokens}, cfg, plan, mesh=mesh, mode="decode",
+            caches=caches, t=t, expert_perm=expert_perm, wire_perm=wire_perm,
+            gate_weights=gate_weights, page_table=page_table,
+        )
+        logits = tfm.logits_from_features(params, feats, cfg)  # [B, C, V]
+        if sample and rng is not None:
+            b, c, _ = logits.shape
+            flat = _sample_rows(logits.reshape(b * c, -1), rng.reshape(b * c, 2))
+            toks = flat.reshape(b, c)
+        else:
+            toks = jnp.argmax(logits, axis=-1)
+        toks = toks.astype(jnp.int32)
+        if with_stats:
+            return toks, caches, aux.moe_stats
+        return toks, caches
+
+    return verify_step
+
+
+def make_draft_loop_step(
+    cfg, plan: ShardingPlan, mesh=None, *, k: int, sample: bool = False,
+):
+    """Speculative DRAFT loop (DESIGN.md §11): ``k`` greedy/sampled decode
+    steps of the (cheap) draft config FUSED into one jitted ``lax.scan``.
+
+    Fusion is the perf point: a serial host loop pays one dispatch per draft
+    token, which on launch-overhead-bound decode erases the speculative win;
+    the scan makes the whole k-token draft ONE program launch, so a
+    draft+verify round is 2 launches for up to k+1 emitted tokens.  The
+    draft writes its approximate K/V into the SAME paged pool at positions
+    ``t .. t+k-1`` (read only by its own later iterations); verify then
+    overwrites those positions with full-model K/V.  ``cfg`` here is the
+    DRAFT config (``models.moe.draft_config``).  ``rng``: ``[B, k, 2]``
+    keys — the same per-verified-token keys verify uses, so draft samples
+    are coupled to verify samples (common random numbers).
+    """
+    bad = [
+        k_ for k_ in (*cfg.block_pattern, *cfg.tail_pattern)
+        if k_ not in ("global", "local")
+    ]
+    if bad:
+        raise ValueError(
+            f"speculative drafting needs attention-only block patterns, got {bad}"
+        )
+
+    def draft_loop(
+        params, caches, tokens, t, rng=None, expert_perm=None, wire_perm=None,
+        gate_weights=None, page_table=None,
+    ):
+        b = tokens.shape[0]
+        if rng is None:
+            keys = jnp.zeros((k, b, 2), jnp.uint32)
+        else:
+            keys = jnp.swapaxes(rng, 0, 1)  # [k, B, 2]
+
+        def body(carry, xs):
+            caches, tok = carry
+            i, kk = xs
+            feats, _, caches = tfm.model_apply(
+                params, {"tokens": tok}, cfg, plan, mesh=mesh, mode="decode",
+                caches=caches, t=t + i, expert_perm=expert_perm,
+                wire_perm=wire_perm, gate_weights=gate_weights,
+                page_table=page_table,
+            )
+            logits = tfm.logits_from_features(params, feats, cfg)[:, -1]
+            if sample:
+                nxt = _sample_rows(logits, kk)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)[:, None]
+            return (caches, nxt), nxt[:, 0]
+
+        (caches, _), drafts = jax.lax.scan(
+            body, (caches, tokens), (jnp.arange(k, dtype=jnp.int32), keys)
+        )
+        return jnp.swapaxes(drafts, 0, 1), caches  # [B, k]
+
+    return draft_loop
 
 
 # ---------------------------------------------------------------------------

@@ -125,6 +125,32 @@ def test_paged_flash_decode_bit_exact_vs_oracle(case):
     assert float(jnp.max(jnp.abs(out - expect))) < 1e-5, c
 
 
+@pytest.mark.parametrize("c", [1, 2, 4])
+def test_paged_flash_decode_verify_spans(c):
+    """Speculative verify reads the pool at span widths C in {1, 2, 4}
+    (serial decode, K=1 and K=3 draft/verify): interpret-mode pallas must be
+    BIT-identical to the kernels/ref.py oracle on a permuted, non-contiguous
+    page table — the verify pass re-scores drafted positions in place, so
+    even ULP-level drift would break bit-exact acceptance."""
+    b, hq, hkv, d, page, p = 3, 4, 2, 32, 8, 6
+    n_pool = b * p + 5
+    kq, kk, kv, kt = jax.random.split(jax.random.PRNGKey(c), 4)
+    q = jax.random.normal(kq, (b, c, hq, d), jnp.float32)
+    k_pool = jax.random.normal(kk, (n_pool, page, hkv, d), jnp.float32)
+    v_pool = jax.random.normal(kv, (n_pool, page, hkv, d), jnp.float32)
+    perm = jax.random.permutation(kt, n_pool)[: b * p].reshape(b, p)
+    lengths = jnp.asarray([p * page - c - 1 - 3 * i for i in range(b)],
+                          jnp.int32)
+    used = -(-(lengths + c) // page)
+    table = jnp.where(jnp.arange(p)[None, :] < used[:, None], perm, -1)
+    out = paged_flash_decode_pallas(
+        q, k_pool, v_pool, table, lengths, interpret=True
+    )
+    oracle = ref.paged_flash_decode(q, k_pool, v_pool, table, lengths)
+    assert out.shape == (b, c, hq, d)
+    assert float(jnp.max(jnp.abs(out - oracle))) == 0.0, c
+
+
 def test_flash_attention_chunked_matches_ref():
     kq, kk, kv = jax.random.split(KEY, 3)
     q = jax.random.normal(kq, (2, 4, 256, 32))

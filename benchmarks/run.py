@@ -24,6 +24,7 @@ claims, next to the paper's value:
   collectives              flat vs hierarchical vs fused a2a (BENCH_collectives.json)
   overlap                  serial vs chunked comm/compute schedule (BENCH_overlap.json)
   serve                    reconfigurable serving engine + priced scenario (BENCH_serve.json)
+  fleet                    multi-replica steering: locality vs least-loaded vs one big replica (BENCH_fleet.json)
   spec_decode              speculative vs serial decode + priced acceptance sweep (BENCH_spec.json)
   kernels                  Pallas-kernel oracle timings (framework table)
 """
@@ -850,6 +851,98 @@ def serve(fast=False):
         json.dump(history, f, indent=2)
 
 
+def fleet(fast=False):
+    """Fleet serving scenario (DESIGN.md §12, BENCH_fleet.json).
+
+    The priced fleet netsim at EQUAL total GPUs: N steered replicas
+    (gate-locality vs least-loaded admission) vs one big replica with the
+    same server count and slot budget.  Reports fleet goodput-per-dollar,
+    the per-replica resident-expert working set (the §3 locality win: a
+    region-pure replica streams a few hot experts per decode tick where a
+    blended one streams most of E), and the degradation gate — one replica
+    failing mid-run must strand nothing.  Acceptance: locality steering
+    >= least-loaded on goodput/$ for the region-skewed mix."""
+    import dataclasses as dc
+    import json
+    import os
+
+    from repro.configs.paper_models import MIXTRAL_8X7B
+    from repro.core.netsim import simulate_fleet
+
+    model = dc.replace(MIXTRAL_8X7B, num_blocks=8, overlap_chunks=4)
+    n_req = 32 if fast else 64
+    replicas, servers = 4, 2
+    common = dict(
+        num_requests=n_req, mixes=("chat", "agentic"), seed=0,
+        arrival_scale=0.05, num_servers_replica=servers, slots=16,
+    )
+    runs = []
+    for label, kw in (
+        ("locality", dict(policy="locality", num_replicas=replicas)),
+        ("least_loaded", dict(policy="least_loaded", num_replicas=replicas)),
+        # one big replica at equal total GPUs: R x S servers, R x slots
+        ("single_big", dict(policy="least_loaded", num_replicas=1,
+                            num_servers_replica=replicas * servers,
+                            slots=16 * replicas)),
+        ("locality_fail", dict(policy="locality", num_replicas=replicas,
+                               fail=(0, 200))),
+    ):
+        r = simulate_fleet(model, **{**common, **kw})
+        runs.append({
+            "run": label,
+            "policy": r.policy,
+            "num_replicas": r.num_replicas,
+            "completed": r.completed,
+            "requests": r.requests,
+            "goodput_tok_s": round(r.goodput_tok_s, 1),
+            "fleet_cost_usd": round(r.fleet_cost_usd, 2),
+            "cross_tier_cost_usd": round(r.cross_tier_cost_usd, 2),
+            "goodput_per_mdollar": round(r.goodput_per_mdollar, 2),
+            "ttft_p50_ms": round(r.ttft_p50_s * 1e3, 3),
+            "slo_attainment": r.slo_attainment,
+            "reconfig_count": r.reconfig_count,
+            "reconfig_blocked_ms": round(r.reconfig_blocked_s * 1e3, 3),
+            "mean_active_experts": [
+                round(x, 2) for x in r.replica_mean_active_experts
+            ],
+        })
+        _row(
+            f"fleet/{label}", 0.0,
+            f"goodput={r.goodput_tok_s:.0f}tok/s per_M$={r.goodput_per_mdollar:.1f} "
+            f"completed={r.completed}/{r.requests} reconfigs={r.reconfig_count} "
+            f"neff={[round(x, 1) for x in r.replica_mean_active_experts]}",
+        )
+    by = {e["run"]: e for e in runs}
+    ratio = (
+        by["locality"]["goodput_per_mdollar"]
+        / by["least_loaded"]["goodput_per_mdollar"]
+    )
+    assert ratio >= 1.0, (
+        f"locality steering fell below least-loaded on goodput/$: {ratio:.2f}"
+    )
+    assert by["locality_fail"]["completed"] == by["locality_fail"]["requests"], (
+        "replica failure stranded requests"
+    )
+    _row("fleet/steering_gain", 0.0,
+         f"locality_over_least_loaded={ratio:.2f}x (acceptance: >= 1.0); "
+         f"single_big per_M$={by['single_big']['goodput_per_mdollar']:.1f} "
+         f"at equal total GPUs")
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_fleet.json")
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append({
+        "bench": "fleet",
+        "runs": runs,
+        "locality_over_least_loaded": round(ratio, 3),
+    })
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
 def paged_decode(fast=False):
     """Paged KV cache vs dense ring buffer at EQUAL HBM budget
     (DESIGN.md §10, BENCH_paged.json).
@@ -1275,6 +1368,7 @@ ALL = {
     "collectives": collectives,
     "overlap": overlap,
     "serve": serve,
+    "fleet": fleet,
     "paged_decode": paged_decode,
     "spec_decode": spec_decode,
     "kernels": kernels,

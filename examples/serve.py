@@ -100,6 +100,18 @@ def main():
     if rep.gate_load_total is not None:
         share = rep.gate_load_total.sum(0) / max(rep.gate_load_total.sum(), 1e-9)
         print(f"  gate-load share per expert: {np.round(share, 2)}")
+    if eng.decision_log:
+        print("  decision log (control-plane verdict each cadence):")
+        for d in eng.decision_log:
+            if d["kind"] == "reconfig":
+                verdict = (
+                    f"moved layers {d['layers']} (gain {d['gain_bytes']:.0f} B)"
+                    if d["applied"] else f"held placement ({'; '.join(d['reasons'])})"
+                )
+                print(f"    tick {d['tick']:>4}: {verdict}")
+            else:
+                print(f"    tick {d['tick']:>4}: {d['kind']} "
+                      f"{({k: v for k, v in d.items() if k not in ('tick', 'kind')})}")
 
     if cfg.is_moe and not args.no_parity_check:
         base = build_engine(params, cfg, plan, args, reconfig=False)

@@ -46,8 +46,88 @@ __all__ = [
     "ControlPlane",
     "FailureHandler",
     "PlacementApplier",
+    "RegionGateStats",
     "permute_expert_weights",
 ]
+
+
+class RegionGateStats:
+    """Region-conditioned expert-mix statistics (EWMA per traffic region).
+
+    The paper's §3 measurement — gate load is *regionally* skewed — applied
+    at the granularity a fleet steers on: for every traffic region ``r`` keep
+    an exponentially weighted per-layer expert mix ``mix[r] : [L, E]`` plus a
+    confidence weight (total observation mass).  Each serving tick a replica
+    attributes its observed gate load to the regions of its live requests
+    (weights = each region's share of live slots); with locality steering the
+    replicas become region-pure and the per-region statistics sharpen — the
+    self-reinforcing loop DESIGN.md §12 describes.
+
+    Everything is plain numpy and JSON-serializable (``state_dict``) so the
+    stats ride the same checkpoint path as the placement perms.
+    """
+
+    def __init__(self, num_regions: int, num_layers: int, num_experts: int,
+                 *, alpha: float = 0.3):
+        self.num_regions = num_regions
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.alpha = alpha
+        self.mix = np.full(
+            (num_regions, num_layers, num_experts), 1.0 / num_experts
+        )
+        self.weight = np.zeros(num_regions)
+
+    def observe(self, region_weights: dict[int, float], load: np.ndarray) -> None:
+        """Fold one tick's gate load ``[L, E]`` into each live region's EWMA,
+        scaled by that region's share of the tick's live slots."""
+        load = np.asarray(load, dtype=np.float64)
+        s = load.sum(axis=-1, keepdims=True)
+        norm = np.where(s > 0, load / np.maximum(s, 1e-12), 1.0 / load.shape[-1])
+        for region, w in region_weights.items():
+            if w <= 0 or not (0 <= region < self.num_regions):
+                continue
+            a = min(self.alpha * w, 1.0)
+            self.mix[region] = (1.0 - a) * self.mix[region] + a * norm
+            self.weight[region] += w
+
+    def mix_for(self, region: int) -> np.ndarray | None:
+        """``[L, E]`` mix estimate, or None while the region is still cold."""
+        if not (0 <= region < self.num_regions) or self.weight[region] < 1.0:
+            return None
+        return self.mix[region]
+
+    @staticmethod
+    def merged(stats: list["RegionGateStats | None"]) -> "RegionGateStats | None":
+        """Fleet-level view: confidence-weighted average across replicas."""
+        live = [s for s in stats if s is not None]
+        if not live:
+            return None
+        out = RegionGateStats(
+            live[0].num_regions, live[0].num_layers, live[0].num_experts
+        )
+        for r in range(out.num_regions):
+            w = np.array([s.weight[r] for s in live])
+            out.weight[r] = w.sum()
+            if out.weight[r] > 0:
+                out.mix[r] = sum(
+                    s.mix[r] * wr for s, wr in zip(live, w)
+                ) / out.weight[r]
+        return out
+
+    def state_dict(self) -> dict:
+        return {"mix": self.mix.tolist(), "weight": self.weight.tolist(),
+                "alpha": self.alpha}
+
+    def load_state_dict(self, state: dict) -> None:
+        mix = np.asarray(state["mix"], dtype=np.float64)
+        if mix.shape != self.mix.shape:
+            raise ValueError(
+                f"region stats shape {mix.shape} != {self.mix.shape}"
+            )
+        self.mix = mix
+        self.weight = np.asarray(state["weight"], dtype=np.float64)
+        self.alpha = float(state.get("alpha", self.alpha))
 
 
 def permute_expert_weights(params, inv_stack: np.ndarray, num_virtual: int):
@@ -209,6 +289,7 @@ class ControlPlane:
         use_copilot: bool = True,
         fit_steps: int = 150,
         batched_refit: bool = True,
+        num_regions: int = 0,
     ):
         self.num_layers = num_layers
         self.num_experts = num_experts
@@ -236,6 +317,12 @@ class ControlPlane:
             np.arange(self.num_virtual, dtype=np.int64), (num_layers, 1)
         )
         self.reconfig_count = 0
+        # Per-replica region-conditioned stats (fleet steering, DESIGN.md §12).
+        self.region_stats = (
+            RegionGateStats(num_regions, num_layers, num_experts)
+            if num_regions > 0
+            else None
+        )
 
     @classmethod
     def for_simulation(
@@ -263,6 +350,13 @@ class ControlPlane:
     def observe(self, layer: int, expert_load, device_matrix=None) -> None:
         """Record one layer's realized expert load for this step."""
         self.monitor.record(layer, expert_load, device_matrix)
+
+    def observe_regions(self, region_weights: dict[int, float],
+                        load: np.ndarray) -> None:
+        """Attribute one tick's ``[L, E]`` gate load to traffic regions
+        (no-op unless the engine was built with ``num_regions > 0``)."""
+        if self.region_stats is not None and region_weights:
+            self.region_stats.observe(region_weights, load)
 
     def end_step(self) -> None:
         """Close the step: advance the monitor window, refit COPILOT (one
@@ -400,10 +494,13 @@ class ControlPlane:
         a restored server resumes with the SAME expert placement (the perm
         stack composes against physically permuted weights — restoring one
         without the other would misroute every token)."""
-        return {
+        state = {
             "layer_perms": self.layer_perms.tolist(),
             "reconfig_count": int(self.reconfig_count),
         }
+        if self.region_stats is not None:
+            state["region_stats"] = self.region_stats.state_dict()
+        return state
 
     def load_state_dict(self, state: dict) -> None:
         perms = np.asarray(state["layer_perms"], dtype=np.int64)
@@ -417,6 +514,8 @@ class ControlPlane:
                 raise ValueError(f"not a permutation row: {row}")
         self.layer_perms = perms
         self.reconfig_count = int(state.get("reconfig_count", 0))
+        if self.region_stats is not None and "region_stats" in state:
+            self.region_stats.load_state_dict(state["region_stats"])
 
     # -- failures (§5.4) ------------------------------------------------------
     def fail_device(self, device: int) -> list[LayerPlan]:

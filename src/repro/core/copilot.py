@@ -258,6 +258,27 @@ class CopilotPredictor:
         x = self._normalize(np.asarray(observed_load, dtype=np.float64))
         return np.asarray(self.state.transitions[layer] @ x)
 
+    def rollout(self, entry_load: np.ndarray) -> np.ndarray:
+        """Forecast every layer's expert mix from an entry-layer mix.
+
+        Chains the fitted per-layer transition matrices: ``mix[0]`` is the
+        normalized entry load and ``mix[l+1] = P_l @ mix[l]`` (renormalized
+        against drift from the simplex projection's tolerance).  Returns
+        ``[num_layers, num_experts]``.
+
+        This is the fleet steering predictor (DESIGN.md §12): a request's
+        region determines its *entry* mix (region-conditioned gate stats),
+        and the rollout turns that into the full per-layer mix the locality
+        score compares against each replica's resident placement.
+        """
+        x = self._normalize(np.asarray(entry_load, dtype=np.float64))
+        mixes = [x]
+        for layer in range(self.num_layers - 1):
+            x = self.state.transitions[layer] @ x
+            x = x / max(float(x.sum()), 1e-12)
+            mixes.append(x)
+        return np.stack(mixes)
+
     # Baselines from Fig. 19 -------------------------------------------------
     @staticmethod
     def baseline_unchanged(observed_load: np.ndarray) -> np.ndarray:

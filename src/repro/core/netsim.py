@@ -29,6 +29,7 @@ phase-latency costing — this module keeps no private collective formulas.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -45,6 +46,9 @@ __all__ = [
     "simulate_training",
     "ServingResult",
     "simulate_serving",
+    "ReconfigAmortizer",
+    "FleetServingResult",
+    "simulate_fleet",
 ]
 
 
@@ -435,6 +439,51 @@ def simulate_iteration(
 # ---------------------------------------------------------------------------
 
 
+class ReconfigAmortizer:
+    """Per-window accounting for serving-cadence reconfiguration hiding.
+
+    §5.1's rule amortizes an OCS reconfiguration over the pipelined compute
+    between reconfigurations.  The old inline accounting extrapolated the
+    *current tick's* compute over one global window
+    (``every_ticks * tick_compute``) — wrong whenever ticks are
+    heterogeneous (bursty prefill, draining slots, spec rounds), and
+    unusable for a fleet where each replica has its own cadence and its own
+    realized window.  This helper accumulates the compute that actually ran
+    since the previous reconfiguration and hands exactly that budget to
+    ``hide_window`` when the cadence fires.
+
+    The FIRST firing gets an infinite window: it is the cold-start topology
+    setup before any traffic was served, not a runtime reconfiguration —
+    there is no elapsed window to amortize against and nothing in flight to
+    stall.  Both :func:`simulate_serving` and :func:`simulate_fleet` (one
+    instance per replica) share this accounting.
+    """
+
+    def __init__(self, every_ticks: int):
+        self.every = int(every_ticks)
+        self._budget = 0.0
+        self._fired = False
+
+    def due(self, tick: int) -> bool:
+        return self.every > 0 and tick % self.every == 0
+
+    def window(self) -> float:
+        """Hide budget for a reconfiguration firing NOW; resets the
+        accumulator so the next window starts empty."""
+        if not self._fired:
+            self._fired = True
+            self._budget = 0.0
+            return math.inf
+        w = self._budget
+        self._budget = 0.0
+        return w
+
+    def accumulate(self, hideable_s: float) -> None:
+        """Record one tick's realized hideable compute (all phases that run
+        while an OCS slice could be idling)."""
+        self._budget += hideable_s
+
+
 @dataclasses.dataclass
 class ServingResult:
     """Priced serving run on one fabric: latency percentiles, goodput, and
@@ -567,6 +616,7 @@ def simulate_serving(
 
     pending = sorted(requests, key=lambda r: r.arrival_s)
     cursor = 0
+    amort = ReconfigAmortizer(reconfig_every_ticks if cp is not None else 0)
 
     # -- KV residency bookkeeping (tokens) --------------------------------
     # Dense: an admitted request pins its full prompt+output length for its
@@ -731,24 +781,19 @@ def simulate_serving(
                 )
             if ticks % 8 == 0:
                 loads = trace.step()
+            # Amortized over the REALIZED window: one layer's OCS slice is
+            # idle while every other phase of the inter-reconfiguration
+            # stretch runs, so the hide budget is the compute that actually
+            # accumulated since the previous reconfiguration (§5.1's rule at
+            # serving cadence, per-window accounting via ReconfigAmortizer —
+            # every layer's slice of one firing shares the window).
+            window = amort.window() if cp is not None and amort.due(ticks) else None
             for li in range(layers):
                 demand = trace.device_demand(
                     loads[li % loads.shape[0]], model, region,
                     total_bytes=tick_bytes,
                 )
-                if cp is not None and reconfig_every_ticks and (
-                    ticks % reconfig_every_ticks == 0
-                ):
-                    # Amortized over the window: one layer's OCS slice is
-                    # idle while every OTHER phase of the stretch runs, so
-                    # the hide window is the full-tick compute of the whole
-                    # inter-reconfiguration stretch (§5.1's rule at serving
-                    # cadence).
-                    window = (
-                        reconfig_every_ticks
-                        * layers
-                        * (attn_t + exp_t + pf_t + draft_t)
-                    )
+                if window is not None:
                     blocked_tick += cp.apply(
                         cp.plan(li, demand), hide_window=window
                     )
@@ -761,6 +806,7 @@ def simulate_serving(
                 tick_s += total_t
                 a2a_total_s += t_disp + t_comb
                 exposed_total_s += exposed_t
+            amort.accumulate(layers * (attn_t + exp_t + pf_t + draft_t))
             if cp is not None:
                 for li in range(layers):
                     cp.observe(
@@ -837,6 +883,480 @@ def simulate_serving(
         spec_k=spec_k,
         spec_acceptance=spec_acc,
         spec_tokens_per_round=spec_emit,
+    )
+
+
+@dataclasses.dataclass
+class FleetServingResult:
+    """Priced multi-replica serving run: fleet goodput-per-dollar with
+    per-replica fabrics plus the cross-region electrical admission tier
+    (the paper's regional-locality argument at fleet scale, DESIGN.md §12)."""
+
+    policy: str
+    fabric: str
+    num_replicas: int
+    ticks: int
+    sim_seconds: float
+    requests: int
+    completed: int
+    tokens_out: int
+    ttft_p50_s: float
+    ttft_p99_s: float
+    goodput_tok_s: float
+    fleet_cost_usd: float  # sum of per-replica fabric costs
+    cross_tier_cost_usd: float  # electrical admission/steering tier
+    goodput_per_mdollar: float
+    slo_attainment: dict  # SLO class name -> fraction meeting TTFT target
+    steer_counts: dict  # steering-reason -> requests
+    reconfig_count: int
+    reconfig_blocked_s: float
+    # Per-replica EP a2a accounting: payload bytes and routed token copies,
+    # tied by the SAME CommRuntime formula the engine reports —
+    # a2a_bytes[j] == layers * ep_alltoall_bytes(routed_tokens[j], ...)
+    # (cross-checked in tests/test_fleet.py like the single-engine tests).
+    replica_a2a_bytes: list
+    replica_routed_tokens: list
+    replica_mean_active_experts: list  # mean per-tick effective experts
+    cross_tier_bytes: float
+
+    def breakdown(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _region_expert_mixes(
+    num_regions: int, num_experts: int, seed: int, concentration: float
+) -> np.ndarray:
+    """Per-region gate entry mixes ``[R, E]``: sparse Dirichlet draws, the
+    §3 regional skew at fleet granularity.  Deterministic in ``seed``; low
+    ``concentration`` = few hot experts per region (strong locality)."""
+    rng = np.random.default_rng((seed << 8) ^ 0xF1EE7)
+    mixes = rng.dirichlet(np.full(num_experts, concentration), size=num_regions)
+    mixes = mixes + 1e-4  # keep every expert reachable
+    return mixes / mixes.sum(axis=1, keepdims=True)
+
+
+def _mix_demand(
+    mix: np.ndarray, perm: np.ndarray, num_servers: int, epd: int,
+    total_bytes: float,
+) -> np.ndarray:
+    """``[S, S]`` inter-server demand of serving ``mix`` under a placement:
+    each source server holds an equal token share, sends each expert's slice
+    to the server owning its slot; sender-local traffic never hits the wire."""
+    share = np.zeros(num_servers)
+    np.add.at(share, np.asarray(perm) // epd, mix)
+    dem = np.tile((total_bytes / num_servers) * share[None, :], (num_servers, 1))
+    np.fill_diagonal(dem, 0.0)
+    return dem
+
+
+def simulate_fleet(
+    model: SimModel,
+    *,
+    fabric_name: str = "mixnet",
+    num_replicas: int = 4,
+    link_gbps: float = 400.0,
+    num_servers_replica: int | None = None,
+    gpus_per_server: int = 8,
+    mixes=("chat", "agentic", "batch_summarize"),
+    num_requests: int = 96,
+    seed: int = 0,
+    policy: str = "locality",
+    slots: int = 16,
+    prefill_chunk_tokens: int = 256,
+    use_reconfig: bool = True,
+    reconfig_every_ticks: int = 64,
+    reconfig_min_gain: float = 0.1,
+    region_concentration: float = 0.15,
+    arrival_scale: float = 1.0,
+    cross_region_gbps: float = 400.0,
+    locality_gamma: float = 0.5,
+    steer_load_beta: float = 0.25,
+    drain: tuple | None = None,  # (replica_idx, at_tick)
+    fail: tuple | None = None,  # (replica_idx, at_tick)
+    max_ticks: int = 200_000,
+) -> FleetServingResult:
+    """Price a multi-replica serving fleet with cross-replica steering.
+
+    ``num_replicas`` replicas each own a ``num_servers_replica``-server
+    fabric (priced individually) and a placement-mode ControlPlane; one
+    global admission queue dispatches by SLO class priority
+    (:data:`repro.serve.workload.SLO_CLASSES`) and steers by ``policy``:
+
+    * ``locality`` — :func:`repro.serve.fleet.locality_score` against each
+      replica's served-mix EWMA and placement fit (the engine-side score,
+      reused verbatim at flow level);
+    * ``least_loaded`` / ``round_robin`` — the baselines.
+
+    The priced locality mechanism is expert-weight **residency**: a decode
+    tick's HBM floor streams only the experts its served mix actually
+    touches (effective experts ``1 / sum(mix^2)``, inverse Simpson), so a
+    region-pure replica streams 2–3 hot experts where a blended one streams
+    most of E — the §3 locality argument, cashed out as tokens/s.  Each
+    replica's a2a is priced on its own fabric from the mix mapped through
+    its placement; on the fleet cadence a replica whose *served* mix has
+    drifted off its placement (its ControlPlane's min-gain hysteresis — the
+    steer-vs-reconfigure rule) re-solves locally, paying the OCS delay
+    against its :class:`ReconfigAmortizer` window.
+
+    The **cross-region electrical tier** is the admission/steering fabric
+    above the replicas: priced as a small packet-switched layer over
+    ``num_replicas`` endpoints, and each steered request pays its prompt
+    transfer across it before prefill starts (a TTFT adder).  Replicas tick
+    synchronously off the admission clock (the slowest busy replica sets
+    the tick — flow-level conservatism).
+
+    ``drain=(j, t)`` / ``fail=(j, t)`` script degradation: a drained
+    replica finishes in-flight work while its queued requests re-steer; a
+    failed replica loses in-flight generation (those tokens are uncounted
+    and the requests restart elsewhere).
+    """
+    from repro.core import cost as costm
+    from repro.core.fabric import FabricConfig, make_fabric
+    from repro.core.placement import placement_cost
+    from repro.serve.fleet import locality_score
+    from repro.serve.workload import MIXES, WorkloadGenerator, slo_for
+
+    if policy not in ("locality", "least_loaded", "round_robin"):
+        raise ValueError(f"unknown steering policy {policy!r}")
+    mixes = (mixes,) if isinstance(mixes, str) else tuple(mixes)
+    num_regions = max(MIXES[m].num_regions for m in mixes)
+    region_mix = _region_expert_mixes(
+        num_regions, model.num_experts, seed, region_concentration
+    )
+
+    # -- the tagged request stream (one queue over all SLO classes) -------
+    reqs = []
+    for i, mname in enumerate(mixes):
+        gen = WorkloadGenerator(mname, seed=seed + i)
+        cls = slo_for(mname)
+        share = num_requests // len(mixes) + (
+            1 if i < num_requests % len(mixes) else 0
+        )
+        for sr in gen.generate(share):
+            reqs.append({
+                "rid": i * num_requests + sr.rid,
+                "arrival_s": sr.arrival_s * arrival_scale,
+                "prompt_len": sr.prompt_len,
+                "max_new": sr.max_new_tokens,
+                "region": sr.region % num_regions,
+                "slo": cls,
+            })
+    pending = sorted(reqs, key=lambda r: (r["arrival_s"], r["rid"]))
+    cursor = 0
+
+    # -- per-replica state ------------------------------------------------
+    S = num_servers_replica or max(model.gpus_per_stage // gpus_per_server, 2)
+    layers = model.layers_per_stage
+    d, dff, k, dt = model.d_model, model.d_ff, model.top_k, model.dtype_bytes
+    E = model.num_experts
+    rate = model.flops_per_gpu * S * gpus_per_server
+    hbm = model.hbm_bytes_per_s * S * gpus_per_server
+    R = num_replicas
+    fabrics = [
+        make_fabric(fabric_name, FabricConfig(
+            num_servers=S, gpus_per_server=gpus_per_server,
+            link_gbps=link_gbps,
+        ))
+        for _ in range(R)
+    ]
+    cps = [
+        ControlPlane(
+            num_layers=1, num_experts=E, num_devices=S,
+            min_gain_fraction=reconfig_min_gain, use_copilot=False,
+        )
+        for _ in range(R)
+    ]
+    epd = cps[0].experts_per_device
+    a2a_ops = [
+        comm.AllToAll(comm.CommSpec.from_fabric(f, S)) for f in fabrics
+    ]
+    amorts = [ReconfigAmortizer(reconfig_every_ticks) for _ in range(R)]
+    prefill_q = [[] for _ in range(R)]  # [req, tokens_left]
+    live = [[] for _ in range(R)]  # [req, tokens_left, ctx, start_clock]
+    mix_ewma = [np.full(E, 1.0 / E) for _ in range(R)]
+    alive = [True] * R
+    draining = [False] * R
+    a2a_bytes = [0.0] * R
+    routed_tokens = [0] * R
+    neff_sum = [0.0] * R
+    neff_ticks = [0] * R
+    blocked_total = 0.0
+    reconfig_count = 0
+    steer_counts: dict[str, int] = {}
+    cross_tier_bytes = 0.0
+    xfer_s: dict[int, float] = {}  # rid -> cross-tier prompt-transfer delay
+    queue: list = []  # (priority, arrival_s, seq, req)
+    seq = 0
+    hits_by_class: dict[str, list] = {}
+    ttft_all: list[float] = []
+    clock = 0.0
+    busy_s = 0.0  # fleet service time (excludes idle arrival gaps)
+    ticks = 0
+    tokens_out = 0
+    completed = 0
+    drain_j, drain_t = drain if drain else (-1, -1)
+    fail_j, fail_t = fail if fail else (-1, -1)
+
+    def _backlog(j):
+        return len(prefill_q[j]) + len(live[j])
+
+    def _requeue(req):
+        nonlocal seq
+        import heapq
+
+        heapq.heappush(queue, (req["slo"].priority, req["arrival_s"], seq, req))
+        seq += 1
+
+    def _replica_mix(j):
+        """The mix replica j is serving right now (live + admitted)."""
+        regs = [it[0]["region"] for it in live[j]]
+        regs += [it[0]["region"] for it in prefill_q[j]]
+        if not regs:
+            return None
+        return region_mix[regs].mean(axis=0)
+
+    import heapq
+
+    while ticks < max_ticks:
+        while cursor < len(pending) and pending[cursor]["arrival_s"] <= clock:
+            _requeue(pending[cursor])
+            cursor += 1
+        if drain_t == ticks and 0 <= drain_j < R:
+            draining[drain_j] = True
+            started = [it for it in prefill_q[drain_j]
+                       if it[1] < it[0]["prompt_len"]]
+            for it in prefill_q[drain_j]:
+                if it[1] == it[0]["prompt_len"]:  # unstarted: re-steer
+                    _requeue(it[0])
+            prefill_q[drain_j] = started
+        if fail_t == ticks and 0 <= fail_j < R and alive[fail_j]:
+            alive[fail_j] = False
+            for it in prefill_q[fail_j]:
+                _requeue(it[0])
+            for it in live[fail_j]:
+                tokens_out -= it[0]["max_new"] - it[1]  # emitted-then-lost
+                _requeue(it[0])
+            prefill_q[fail_j] = []
+            live[fail_j] = []
+
+        busy = any(prefill_q[j] or live[j] for j in range(R))
+        if not queue and not busy:
+            if cursor >= len(pending):
+                break
+            clock = pending[cursor]["arrival_s"]
+            # Keep scripted events tick-addressable across idle jumps.
+            ticks += 1
+            continue
+        if queue and not busy and not any(
+            alive[j] and not draining[j] for j in range(R)
+        ):
+            break  # whole fleet drained/failed: queued work is stranded
+
+        # -- dispatch (strict SLO priority, steering policy) ---------------
+        rr = ticks  # round-robin phase
+        while queue:
+            cands = [
+                j for j in range(R)
+                if alive[j] and not draining[j] and _backlog(j) < slots + 4
+            ]
+            if not cands:
+                break
+            _, _, _, req = heapq.heappop(queue)
+            if policy == "round_robin":
+                j = cands[rr % len(cands)]
+                rr += 1
+                reason = "round-robin"
+            elif policy == "least_loaded":
+                j = min(cands, key=lambda c: (_backlog(c), c))
+                reason = "least-loaded"
+            else:
+                pm = region_mix[req["region"]]
+                scored = sorted(
+                    (
+                        locality_score(
+                            pm, mix_ewma[c],
+                            placement_fit=placement_cost(
+                                np.tile(pm[None, :], (S, 1)),
+                                cps[c].layer_perms[0], epd,
+                            ) / S,
+                            backlog=_backlog(c), slots=slots,
+                            gamma=locality_gamma, beta=steer_load_beta,
+                        ),
+                        c,
+                    )
+                    for c in cands
+                )
+                j = scored[0][1]
+                reason = "locality"
+            steer_counts[reason] = steer_counts.get(reason, 0) + 1
+            if req["rid"] not in xfer_s:
+                pbytes = req["prompt_len"] * dt * d  # activation-width proxy
+                cross_tier_bytes += pbytes
+                xfer_s[req["rid"]] = (
+                    pbytes * 8 / max(cross_region_gbps * 1e9, 1e-9) + 1e-3
+                    if R > 1 else 0.0
+                )
+            prefill_q[j].append([req, req["prompt_len"]])
+
+        # -- one synchronized priced tick across replicas ------------------
+        tick_dur = 0.0
+        for j in range(R):
+            if not alive[j] or not (prefill_q[j] or live[j]):
+                continue
+            n_live = len(live[j])
+            pf_tokens = 0
+            budget = prefill_chunk_tokens
+            done_pf = []
+            for item in prefill_q[j]:
+                if budget <= 0 or n_live + len(done_pf) >= slots:
+                    break
+                take = min(budget, item[1])
+                item[1] -= take
+                budget -= take
+                pf_tokens += take
+                if item[1] == 0:
+                    done_pf.append(item[0])
+            routed = n_live + pf_tokens
+            rep_t = 0.0
+            blocked = 0.0
+            if routed:
+                mix = _replica_mix(j)
+                mix_ewma[j] = 0.7 * mix_ewma[j] + 0.3 * mix
+                served = mix_ewma[j]
+                n_eff = 1.0 / float((served ** 2).sum())  # inverse Simpson
+                neff_sum[j] += n_eff
+                neff_ticks[j] += 1
+                tick_bytes = comm.ep_alltoall_bytes(routed, k, d, dt)
+                a2a_bytes[j] += layers * tick_bytes
+                routed_tokens[j] += routed
+                mean_ctx = (
+                    float(np.mean([it[2] for it in live[j]])) if live[j] else 64.0
+                )
+                attn_t = max(
+                    (2 * n_live * 4 * d * d + 2 * 2 * n_live * mean_ctx * d)
+                    / rate,
+                    (n_live * mean_ctx * 2 * d * dt) / hbm,
+                )
+                # The residency floor: only the experts the served mix
+                # touches stream from HBM each tick (hot-expert caching) —
+                # a region-pure replica's floor is its few hot experts.
+                exp_t = max(
+                    2 * routed * k * 3 * d * dff / rate,
+                    (min(n_eff, E) * 3 * d * dff * dt) / hbm,
+                )
+                pf_t = pf_tokens * (2 * 4 * d * d + 2 * k * 3 * d * dff) / rate
+                cps[j].observe(0, served * routed * k)
+                cps[j].end_step()
+                if use_reconfig and amorts[j].due(ticks):
+                    window = amorts[j].window()
+                    plan = cps[j].plan(0)
+                    if plan.reconfigure:
+                        # Steering stopped keeping this replica's mix
+                        # resident: re-solve locally, pay the OCS delay
+                        # against the realized window.
+                        cps[j].apply(plan)
+                        blocked = max(
+                            0.0, fabrics[j].cfg.reconfig_delay_s - window
+                        )
+                        reconfig_count += 1
+                demand = _mix_demand(
+                    served, cps[j].layer_perms[0], S, epd, tick_bytes
+                )
+                if hasattr(fabrics[j], "prepare"):
+                    fabrics[j].prepare(demand, can_hide=True)
+                t_disp = a2a_ops[j].cost(fabrics[j], demand)
+                t_comb = a2a_ops[j].cost(fabrics[j], demand.T)
+                total_t, _ = overlap.decode_tick_phase(
+                    t_disp, exp_t, t_comb, max(model.overlap_chunks, 1),
+                    attn=attn_t, prefill_compute=pf_t,
+                )
+                rep_t = layers * total_t
+                amorts[j].accumulate(layers * (attn_t + exp_t + pf_t))
+            blocked_total += blocked
+            tick_dur = max(tick_dur, rep_t + blocked)
+            # completions (as simulate_serving: live decode emits first,
+            # the tick's finished prefills join live for the NEXT tick)
+            still = []
+            for it in live[j]:
+                it[1] -= 1
+                it[2] += 1
+                tokens_out += 1
+                if it[1] <= 0:
+                    completed += 1
+                else:
+                    still.append(it)
+            live[j] = still
+            for req in done_pf:
+                prefill_q[j] = [it for it in prefill_q[j] if it[0] is not req]
+                t1 = clock + rep_t + blocked - req["arrival_s"] + xfer_s.get(
+                    req["rid"], 0.0
+                )
+                ttft_all.append(t1)
+                name = req["slo"].name
+                hits_by_class.setdefault(name, []).append(
+                    int(t1 <= req["slo"].ttft_target_s)
+                )
+                tokens_out += 1  # the prefill's next-token
+                if req["max_new"] <= 1:
+                    completed += 1
+                else:
+                    live[j].append(
+                        [req, req["max_new"] - 1, req["prompt_len"], clock]
+                    )
+        clock += tick_dur
+        busy_s += tick_dur
+        ticks += 1
+
+    # -- pricing ----------------------------------------------------------
+    fleet_cost = sum(
+        costm.fabric_cost(
+            f.name, f.cfg.num_servers, int(f.cfg.link_gbps),
+            nics_per_server=f.cfg.nics_per_server, eps_nics=f.cfg.eps_nics,
+            ocs_nics=f.cfg.ocs_nics, oversub_ratio=f.cfg.oversub_ratio,
+        )
+        for f in fabrics
+    )
+    cross_cost = (
+        costm.fabric_cost(
+            "fat-tree", max(R, 2), int(cross_region_gbps), nics_per_server=2
+        )
+        if R > 1
+        else 0.0
+    )
+    sim_seconds = max(clock, 1e-12)
+    # Goodput over fleet SERVICE time, not wall clock: an open-loop arrival
+    # stream can leave the fleet idle between bursts, and that idle time is
+    # a property of the workload, not of the steering policy under test.
+    goodput = tokens_out / max(busy_s, 1e-12)
+    pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
+    return FleetServingResult(
+        policy=policy,
+        fabric=fabric_name,
+        num_replicas=R,
+        ticks=ticks,
+        sim_seconds=sim_seconds,
+        requests=len(pending),
+        completed=completed,
+        tokens_out=int(round(tokens_out)),
+        ttft_p50_s=pct(ttft_all, 50),
+        ttft_p99_s=pct(ttft_all, 99),
+        goodput_tok_s=goodput,
+        fleet_cost_usd=fleet_cost,
+        cross_tier_cost_usd=cross_cost,
+        goodput_per_mdollar=goodput / ((fleet_cost + cross_cost) / 1e6),
+        slo_attainment={
+            name: float(np.mean(v)) for name, v in sorted(hits_by_class.items())
+        },
+        steer_counts=steer_counts,
+        reconfig_count=reconfig_count,
+        reconfig_blocked_s=blocked_total,
+        replica_a2a_bytes=list(a2a_bytes),
+        replica_routed_tokens=[int(t) for t in routed_tokens],
+        replica_mean_active_experts=[
+            (neff_sum[j] / neff_ticks[j]) if neff_ticks[j] else 0.0
+            for j in range(R)
+        ],
+        cross_tier_bytes=cross_tier_bytes,
     )
 
 

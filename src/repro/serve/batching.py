@@ -141,6 +141,10 @@ class Request:
     prompt: np.ndarray  # [S_prompt] int32
     max_new_tokens: int = 16
     eos_id: int | None = None
+    # Traffic-region tag (workload regions; None = untagged).  The engine
+    # attributes each tick's gate load to its live requests' regions — the
+    # region-conditioned statistics fleet steering scores replicas with.
+    region: int | None = None
     out: list = dataclasses.field(default_factory=list)
     error: str | None = None
     submit_tick: int = -1  # tick the request entered the queue

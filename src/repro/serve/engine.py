@@ -84,6 +84,14 @@ class ServeConfig:
     # Base seed for the per-(request, emitted-token) sampling keys (only
     # used when sample=True).
     sample_seed: int = 0
+    # Fleet hooks (DESIGN.md §12).  ``external_control`` builds the control
+    # plane even with reconfig_every=0 — an external controller (FleetEngine)
+    # decides WHEN to reconfigure and drives ``apply_plans`` itself.
+    # ``num_regions`` > 0 turns on region-conditioned gate statistics: each
+    # tick's observed gate load is attributed to the traffic regions of the
+    # live requests (the per-replica statistics fleet steering merges).
+    external_control: bool = False
+    num_regions: int = 0
 
 
 @dataclasses.dataclass
@@ -158,7 +166,7 @@ class ServeEngine:
         )
         self.controlplane: ControlPlane | None = None
         self.applier: PlacementApplier | None = None
-        if cfg.is_moe and s.reconfig_every:
+        if cfg.is_moe and (s.reconfig_every or s.external_control):
             ev, r = virtual_experts(cfg.moe.num_experts, plan.model_size)
             ndev = s.num_devices or max(plan.model_size, 1)
             self.controlplane = ControlPlane(
@@ -168,6 +176,7 @@ class ServeEngine:
                 replication=r,
                 min_gain_fraction=s.reconfig_min_gain,
                 use_copilot=s.use_copilot,
+                num_regions=s.num_regions,
             )
             # Wire re-addressing is only realizable when the decode path
             # actually runs the mixnet a2a (sparse decode on a model axis).
@@ -192,6 +201,10 @@ class ServeEngine:
         self.a2a_bytes = 0.0
         self.gate_load_total: np.ndarray | None = None
         self.tick_log: list[TickStats] = []
+        # Fleet/lifecycle state (DESIGN.md §12).
+        self.draining = False
+        self.decision_log: list[dict] = []
+        self._resident_mix: np.ndarray | None = None  # [L, E] EWMA gate mix
 
     # -- request intake -------------------------------------------------------
     @property
@@ -203,7 +216,40 @@ class ServeEngine:
         return self.batcher.tick
 
     def submit(self, req: Request) -> None:
+        if self.draining:
+            raise RuntimeError("engine is draining; admissions refused")
         self.batcher.submit(req)
+
+    # -- drain / restore lifecycle (DESIGN.md §12) ----------------------------
+    def drain(self) -> list[Request]:
+        """Stop accepting work: refuse new admissions, hand back every
+        queued-but-not-started request (the fleet re-steers them), and let
+        in-flight requests finish normally.  After draining idles the engine
+        (``batcher.busy`` false), ``save_checkpoint`` exports a complete
+        resumable state: params + placement + paged pool + prefix registry."""
+        self.draining = True
+        handed = [r for r in self.batcher.queue]
+        self.batcher.queue.clear()
+        for r in handed:
+            r.submit_tick = -1
+        self.decision_log.append(
+            {"tick": self.tick, "kind": "drain", "handed_back": len(handed)}
+        )
+        return handed
+
+    def restore(self) -> None:
+        """Re-open admissions after a drain."""
+        self.draining = False
+        self.decision_log.append({"tick": self.tick, "kind": "restore"})
+
+    def unfinished_requests(self) -> list[Request]:
+        """Every admitted-but-unfinished request (queued, prefilling or
+        decoding) — what a fleet must re-admit elsewhere when this replica
+        fails hard (as opposed to a graceful drain)."""
+        live = [r for r in self.batcher.active if r is not None]
+        live += [p.req for p in self.batcher.prefilling]
+        live += list(self.batcher.queue)
+        return live
 
     # -- the decode-time control loop ----------------------------------------
     def _observe(self, stats: TickStats) -> None:
@@ -213,10 +259,67 @@ class ServeEngine:
         self.gate_load_total = (
             load if self.gate_load_total is None else self.gate_load_total + load
         )
+        if load.sum() > 0:
+            norm = load / np.maximum(load.sum(axis=-1, keepdims=True), 1e-12)
+            self._resident_mix = (
+                norm if self._resident_mix is None
+                else 0.8 * self._resident_mix + 0.2 * norm
+            )
         if self.controlplane is not None:
             for layer in range(load.shape[0]):
                 self.controlplane.observe(layer, load[layer])
+            self.controlplane.observe_regions(self.live_region_weights(), load)
             self.controlplane.end_step()
+
+    # -- exported gate statistics (fleet steering inputs, DESIGN.md §12) ------
+    def live_region_weights(self) -> dict[int, float]:
+        """Each traffic region's share of the currently live requests."""
+        regs = [r.region for r in self.batcher.active
+                if r is not None and r.region is not None]
+        regs += [p.req.region for p in self.batcher.prefilling
+                 if p.req.region is not None]
+        if not regs:
+            return {}
+        out: dict[int, float] = {}
+        for rg in regs:
+            out[rg] = out.get(rg, 0.0) + 1.0 / len(regs)
+        return out
+
+    def resident_mix(self) -> np.ndarray | None:
+        """``[L, E]`` EWMA of the recently served gate mix — what "the expert
+        mix this replica is currently keeping resident" means for the fleet's
+        locality score."""
+        return self._resident_mix
+
+    def region_stats(self):
+        """Per-replica region-conditioned gate stats (None unless the engine
+        was built with ``num_regions > 0`` and a control plane)."""
+        return self.controlplane.region_stats if self.controlplane else None
+
+    def placement_cost_of(self, mixes: np.ndarray) -> float:
+        """Bottleneck crossing cost of serving per-layer expert mixes
+        ``[L, E]`` under THIS replica's current placement, normalized to the
+        per-layer demand mass — the placement-fit term of the fleet locality
+        score.  Engines without a control plane score 0 (no placement state
+        to mismatch)."""
+        cp = self.controlplane
+        if cp is None:
+            return 0.0
+        from repro.core.placement import placement_cost
+
+        mixes = np.asarray(mixes, dtype=np.float64)
+        total = 0.0
+        for layer in range(min(mixes.shape[0], cp.num_layers)):
+            mix = mixes[layer]
+            s = mix.sum()
+            if s <= 0:
+                continue
+            vload = np.repeat(mix / s, cp.replication) / cp.replication
+            demand = np.tile(vload[None, :], (cp.num_devices, 1))
+            total += placement_cost(
+                demand, cp.layer_perms[layer], cp.experts_per_device
+            ) / cp.num_devices
+        return float(total)
 
     def apply_plans(self, plans: list[LayerPlan]) -> bool:
         """Actuate placement plans BETWEEN ticks: expert weights are gathered
@@ -235,9 +338,20 @@ class ServeEngine:
 
     def _maybe_reconfigure(self) -> None:
         cp = self.controlplane
-        if cp is None or self.tick == 0 or self.tick % self.scfg.reconfig_every:
+        if (cp is None or not self.scfg.reconfig_every or self.tick == 0
+                or self.tick % self.scfg.reconfig_every):
             return
-        self.apply_plans([cp.plan(layer) for layer in range(cp.num_layers)])
+        plans = [cp.plan(layer) for layer in range(cp.num_layers)]
+        applied = self.apply_plans(plans)
+        self.decision_log.append({
+            "tick": self.tick,
+            "kind": "reconfig",
+            "applied": applied,
+            "layers": [p.layer for p in plans if p.reconfigure],
+            "gain_bytes": float(sum(p.gain_bytes for p in plans
+                                    if p.reconfigure)),
+            "reasons": sorted({p.reason for p in plans}),
+        })
 
     def step(self) -> TickStats:
         """One engine tick: decode + interleaved prefill chunk, stream the
@@ -289,6 +403,7 @@ class ServeEngine:
                     prompt=generator.prompt_tokens(sr),
                     max_new_tokens=sr.max_new_tokens,
                     eos_id=eos_id,
+                    region=sr.region,
                 ))
                 cursor += 1
             if cursor >= len(pending) and not self.batcher.busy:
@@ -374,26 +489,46 @@ class ServeEngine:
             ),
         )
 
-    # -- checkpoint round-trip (DESIGN.md §9) ---------------------------------
+    # -- checkpoint round-trip (DESIGN.md §9, §12) ----------------------------
     def save_checkpoint(self, ckpt_dir: str, step: int | None = None) -> int:
         """Persist params WITH the placement state: the perm stack composes
         against the physically permuted weights, so restoring one without
-        the other would misroute every token."""
+        the other would misroute every token.
+
+        Paged engines additionally export the KV pools and the allocator's
+        page table / prefix registry (the drain checkpoint, DESIGN.md §12):
+        a drained-and-restored replica keeps its warm prefix pages, so
+        re-admitted shared-prefix requests hit the registry bit-identically
+        instead of re-prefilling."""
         step = self.tick if step is None else step
         extra = {
             "placement": self.applier.state_dict() if self.applier else None,
             "serve": {"tick": self.tick},
         }
-        ckpt.save(ckpt_dir, step, {"params": self.batcher.params}, extra=extra)
+        tree = {"params": self.batcher.params}
+        if self.batcher.paged:
+            extra["kv_alloc"] = self.batcher.alloc.state_dict()
+            tree["kv"] = self.batcher.caches
+        ckpt.save(ckpt_dir, step, tree, extra=extra)
         return step
 
     def restore_checkpoint(self, ckpt_dir: str, step: int | None = None) -> int:
         step = ckpt.latest_step(ckpt_dir) if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-        state = ckpt.restore(ckpt_dir, step, {"params": self.batcher.params})
-        self.batcher.params = state["params"]
         extra = ckpt.load_extra(ckpt_dir, step)
+        skeleton = {"params": self.batcher.params}
+        kv_alloc = extra.get("kv_alloc")
+        if kv_alloc is not None and self.batcher.paged:
+            skeleton["kv"] = self.batcher.caches
+        state = ckpt.restore(ckpt_dir, step, skeleton)
+        self.batcher.params = state["params"]
+        if kv_alloc is not None and self.batcher.paged:
+            self.batcher.caches = state["kv"]
+            self.batcher.alloc.load_state_dict(kv_alloc)
+        serve = extra.get("serve") or {}
+        if "tick" in serve:
+            self.batcher.tick = int(serve["tick"])
         placement = extra.get("placement")
         if placement is not None:
             if self.applier is None:

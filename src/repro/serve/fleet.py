@@ -1,0 +1,519 @@
+"""FleetEngine — multi-replica serving with gate-locality steering
+(DESIGN.md §12).
+
+The paper's §3 measurement — MoE gate traffic is *regionally* skewed — is
+why regionally reconfigurable domains beat global reconfiguration.  This
+module applies the same argument one level up, where a "region" is a whole
+:class:`~repro.serve.engine.ServeEngine` replica: a fleet behind one
+admission queue can exploit locality by *steering* (send a request where
+its predicted expert mix is already resident) before it ever has to
+*reconfigure* (rewrite a replica's expert placement).  TA-MoE adapts
+dispatch to a fixed hierarchy; a fleet can do both, and the decision rule
+is explicit here.
+
+Three layers:
+
+* **Admission** — one global queue ordered by SLO class priority
+  (:data:`repro.serve.workload.SLO_CLASSES`: chat > agentic > batch), then
+  arrival.  Dispatch is strict-priority work-conserving: the head request
+  goes to any replica with backlog headroom; if every replica is full the
+  queue simply waits a tick (in-flight work frees capacity, so admission
+  cannot deadlock).
+
+* **Steering** — policy ``locality`` scores each candidate replica with
+  :func:`locality_score`: how far the request's *predicted* per-layer
+  expert mix (region-conditioned gate stats merged across replicas, with
+  the replica COPILOT's :meth:`~repro.core.copilot.CopilotPredictor.rollout`
+  as the forecast refinement) sits from the replica's *resident* mix and
+  current expert placement, plus a small load term so locality never
+  dogpiles one replica.  Cold regions (no statistics yet) fall back to
+  least-loaded, and policies ``least_loaded`` / ``round_robin`` are the
+  steering baselines the benchmarks compare against.
+
+* **Steer-vs-reconfigure** — steering keeps each replica region-pure, so
+  its resident mix keeps matching its placement and no reconfiguration is
+  needed.  When the workload churns (the hot region migrates,
+  ``TrafficMix.region_churn_every_s``), the mix a replica serves drifts
+  off its placement; on the fleet cadence each replica's own
+  :meth:`ControlPlane.plan` hysteresis re-tests its *served* (steered)
+  traffic — a plan that passes the min-gain threshold is exactly the
+  signal that steering alone no longer keeps the mix resident, and the
+  fleet applies it replica-locally (weights or wire perms, between ticks).
+
+**Bit-exactness**: a request's tokens are a function of (prompt, params,
+sampling keys) only — per-request prefill, dense per-token decode and
+per-(rid, position) sampling keys are independent of co-batched traffic
+under dropless dispatch — so the same request produces identical tokens
+regardless of which replica serves it, or whether it was steered, drained
+and re-admitted, or restarted after a replica failure.
+``tests/test_fleet.py`` asserts this across policies × fleet sizes.
+(Capacity-mode dispatch drops tokens based on co-batched demand and
+voids the cross-replica guarantee; the fleet layer does not forbid it,
+but the bit-exactness bar only holds for dropless — the default.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+import numpy as np
+
+from repro.core.controlplane import RegionGateStats
+from repro.serve.batching import Request
+from repro.serve.engine import ServeEngine, ServeReport
+from repro.serve.workload import (
+    SLOClass,
+    SyntheticRequest,
+    WorkloadGenerator,
+    slo_for,
+)
+
+__all__ = [
+    "FleetConfig",
+    "FleetRequest",
+    "FleetReport",
+    "FleetEngine",
+    "locality_score",
+    "fleet_requests",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetRequest:
+    """One request as the fleet sees it: prompt already materialized (the
+    fleet may steer it to any replica, or to several after a failure)."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    region: int | None = None
+    slo: SLOClass = dataclasses.field(default_factory=lambda: slo_for("default"))
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    policy: str = "locality"  # "locality" | "least_loaded" | "round_robin"
+    tick_s: float = 0.05
+    # Per-replica admitted backlog cap (live + prefilling + queued) — the
+    # steering horizon: beyond it a request waits in the global queue where
+    # it can still be re-steered.
+    queue_cap: int = 8
+    max_ticks: int = 20_000
+    # Fleet-cadence steer-vs-reconfigure check (0 = steering only).  Each
+    # replica's own ControlPlane hysteresis (min_gain_fraction) decides; the
+    # fleet only sets the cadence and actuates replica-locally.
+    reconfig_every: int = 0
+    # Locality-score mixing: placement-fit weight and load-penalty weight.
+    locality_gamma: float = 0.5
+    steer_load_beta: float = 0.25
+
+
+@dataclasses.dataclass
+class FleetReport:
+    requests: int
+    completed: int
+    ticks: int
+    tokens_out: int
+    policy: str
+    steer_reasons: dict
+    reconfig_events: int  # fleet-triggered replica reconfigurations
+    ttft_ticks_p50: float
+    ttft_ticks_p99: float
+    slo_attainment: dict  # class name -> fraction meeting its TTFT target
+    outputs: dict  # rid -> list of generated token ids
+    per_replica: list[ServeReport]
+
+
+def _bhattacharyya(a: np.ndarray, b: np.ndarray) -> float:
+    """Overlap of two mix distributions in [0, 1] (1 = identical)."""
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    b = np.asarray(b, dtype=np.float64).reshape(-1)
+    a = a / max(float(a.sum()), 1e-12)
+    b = b / max(float(b.sum()), 1e-12)
+    return float(np.sqrt(a * b).sum())
+
+
+def locality_score(
+    predicted_mix: np.ndarray,
+    resident_mix: np.ndarray | None,
+    *,
+    placement_fit: float = 0.0,
+    backlog: int = 0,
+    slots: int = 1,
+    gamma: float = 0.5,
+    beta: float = 0.25,
+) -> float:
+    """Steering score of one replica for one request — LOWER is better.
+
+    ``1 - BC(predicted, resident)`` is the residency miss (how much of the
+    request's predicted expert mix the replica is not already serving),
+    ``placement_fit`` the normalized bottleneck cost of the predicted mix
+    under the replica's current placement
+    (:meth:`ServeEngine.placement_cost_of`), and the load term keeps
+    locality from dogpiling the single best replica.
+    """
+    miss = 1.0 if resident_mix is None else 1.0 - _bhattacharyya(
+        np.asarray(predicted_mix).mean(axis=0)
+        if np.asarray(predicted_mix).ndim > 1 else predicted_mix,
+        np.asarray(resident_mix).mean(axis=0)
+        if np.asarray(resident_mix).ndim > 1 else resident_mix,
+    )
+    return miss + gamma * placement_fit + beta * backlog / max(slots, 1)
+
+
+def fleet_requests(
+    requests: list[SyntheticRequest],
+    generator: WorkloadGenerator,
+    *,
+    slo: SLOClass | None = None,
+    eos_id: int | None = None,
+) -> list[FleetRequest]:
+    """Materialize one mix's synthetic stream into steerable fleet requests
+    (the SLO class defaults to the generator mix's)."""
+    cls = slo or slo_for(generator.mix.name)
+    return [
+        FleetRequest(
+            rid=sr.rid,
+            prompt=generator.prompt_tokens(sr),
+            max_new_tokens=sr.max_new_tokens,
+            arrival_s=sr.arrival_s,
+            region=sr.region,
+            slo=cls,
+            eos_id=eos_id,
+        )
+        for sr in requests
+    ]
+
+
+class FleetEngine:
+    """N ServeEngine replicas behind one SLO-aware steering queue.
+
+    Replicas may be heterogeneous (different slot counts, device regions or
+    placement state) but must serve the SAME weights — steering assumes any
+    replica produces the same tokens for a request (the bit-exactness bar).
+    """
+
+    def __init__(self, engines: list[ServeEngine], fcfg: FleetConfig | None = None):
+        if not engines:
+            raise ValueError("a fleet needs at least one replica")
+        self.engines = engines
+        self.fcfg = fcfg or FleetConfig()
+        if self.fcfg.policy not in ("locality", "least_loaded", "round_robin"):
+            raise ValueError(f"unknown steering policy {self.fcfg.policy!r}")
+        self.alive = [True] * len(engines)
+        self.tick = 0
+        self.decision_log: list[dict] = []
+        self._queue: list[tuple[int, float, int, FleetRequest]] = []
+        self._seq = 0
+        self._rr = 0
+        self.records: dict[int, FleetRequest] = {}
+        self.assignment: dict[int, int] = {}  # rid -> replica currently serving
+        self._done: dict[int, Request] = {}
+        self._arrival_tick: dict[int, int] = {}
+        self._first_out_tick: dict[int, int] = {}
+        self._finish_tick: dict[int, int] = {}
+        self._polled: list[int] = [0] * len(engines)  # finished-list cursors
+        self._steer_reasons: dict[str, int] = {}
+        self.reconfig_events = 0
+
+    # -- intake ---------------------------------------------------------------
+    def submit(self, freq: FleetRequest) -> None:
+        self.records[freq.rid] = freq
+        self._arrival_tick.setdefault(freq.rid, self.tick)
+        heapq.heappush(
+            self._queue, (freq.slo.priority, freq.arrival_s, self._seq, freq)
+        )
+        self._seq += 1
+
+    # -- replica lifecycle ----------------------------------------------------
+    def drain_replica(self, j: int) -> int:
+        """Graceful drain: replica ``j`` refuses admissions and finishes its
+        in-flight work; its queued-but-unstarted requests are re-steered."""
+        handed = self.engines[j].drain()
+        for r in handed:
+            self.assignment.pop(r.rid, None)
+            self.submit(self.records[r.rid])
+        self.decision_log.append(
+            {"tick": self.tick, "kind": "drain", "replica": j,
+             "resteered": len(handed)}
+        )
+        return len(handed)
+
+    def restore_replica(self, j: int) -> None:
+        self.engines[j].restore()
+        self.decision_log.append(
+            {"tick": self.tick, "kind": "restore", "replica": j}
+        )
+
+    def fail_replica(self, j: int) -> int:
+        """Hard failure: everything unfinished on ``j`` (including partially
+        generated requests) restarts from scratch elsewhere.  Tokens stay
+        bit-identical because generation is a pure function of the request,
+        not of the replica or its co-batched traffic."""
+        self._poll(j)  # keep whatever finished before the failure
+        self.alive[j] = False
+        lost = self.engines[j].unfinished_requests()
+        for r in lost:
+            self.assignment.pop(r.rid, None)
+            self.submit(self.records[r.rid])
+        self.decision_log.append(
+            {"tick": self.tick, "kind": "fail", "replica": j,
+             "resteered": len(lost)}
+        )
+        return len(lost)
+
+    # -- steering -------------------------------------------------------------
+    def _backlog(self, j: int) -> int:
+        b = self.engines[j].batcher
+        return (
+            len(b.queue)
+            + len(b.prefilling)
+            + sum(1 for r in b.active if r is not None)
+        )
+
+    def _candidates(self) -> list[int]:
+        return [
+            j
+            for j, e in enumerate(self.engines)
+            if self.alive[j]
+            and not e.draining
+            and self._backlog(j) < self.fcfg.queue_cap
+        ]
+
+    def _predicted_mixes(self, region: int | None) -> np.ndarray | None:
+        """Fleet-level mix forecast for a region: merge every replica's
+        region-conditioned stats, then refine layers > 0 through the first
+        fitted COPILOT's transition rollout."""
+        if region is None:
+            return None
+        merged = RegionGateStats.merged(
+            [e.region_stats() for j, e in enumerate(self.engines) if self.alive[j]]
+        )
+        if merged is None:
+            return None
+        base = merged.mix_for(region)
+        if base is None:
+            return None
+        for j, e in enumerate(self.engines):
+            cp = e.controlplane
+            if (
+                self.alive[j]
+                and cp is not None
+                and cp.copilot is not None
+                and cp.copilot.state.fitted_steps > 0
+            ):
+                rolled = cp.copilot.rollout(base[0])
+                n = min(len(rolled), len(base))
+                return 0.5 * base[:n] + 0.5 * rolled[:n]
+        return base
+
+    def _pick(self, freq: FleetRequest, cands: list[int]) -> tuple[int, str]:
+        by_load = lambda: min(cands, key=lambda j: (self._backlog(j), j))
+        if self.fcfg.policy == "round_robin":
+            j = cands[self._rr % len(cands)]
+            self._rr += 1
+            return j, "round-robin"
+        if self.fcfg.policy == "least_loaded":
+            return by_load(), "least-loaded"
+        mixes = self._predicted_mixes(freq.region)
+        if mixes is None:
+            return by_load(), "cold-region-fallback"
+        f = self.fcfg
+        scored = sorted(
+            (
+                locality_score(
+                    mixes,
+                    self.engines[j].resident_mix(),
+                    placement_fit=self.engines[j].placement_cost_of(mixes),
+                    backlog=self._backlog(j),
+                    slots=self.engines[j].scfg.slots,
+                    gamma=f.locality_gamma,
+                    beta=f.steer_load_beta,
+                ),
+                j,
+            )
+            for j in cands
+        )
+        return scored[0][1], "locality"
+
+    def _dispatch(self) -> None:
+        while self._queue:
+            cands = self._candidates()
+            if not cands:
+                return  # every replica full — wait for in-flight work
+            prio, arr, seq, freq = heapq.heappop(self._queue)
+            j, reason = self._pick(freq, cands)
+            self.assignment[freq.rid] = j
+            self._steer_reasons[reason] = self._steer_reasons.get(reason, 0) + 1
+            self.engines[j].submit(Request(
+                rid=freq.rid,
+                prompt=freq.prompt,
+                max_new_tokens=freq.max_new_tokens,
+                eos_id=freq.eos_id,
+                region=freq.region,
+            ))
+            self.decision_log.append({
+                "tick": self.tick, "kind": "steer", "rid": freq.rid,
+                "region": freq.region, "slo": freq.slo.name,
+                "replica": j, "reason": reason,
+            })
+
+    # -- steer-vs-reconfigure (fleet cadence) ---------------------------------
+    def _maybe_reconfigure(self) -> None:
+        f = self.fcfg
+        if (
+            f.policy != "locality"
+            or not f.reconfig_every
+            or self.tick == 0
+            or self.tick % f.reconfig_every
+        ):
+            return
+        for j, e in enumerate(self.engines):
+            cp = e.controlplane
+            if not self.alive[j] or cp is None or e.applier is None:
+                continue
+            # The replica's own hysteresis over its *served* (post-steering)
+            # traffic is the decision rule: a plan clearing min_gain means
+            # steering alone no longer keeps this replica's mix resident.
+            plans = [cp.plan(layer) for layer in range(cp.num_layers)]
+            if not any(p.reconfigure for p in plans):
+                continue
+            e.apply_plans(plans)
+            self.reconfig_events += 1
+            self.decision_log.append({
+                "tick": self.tick, "kind": "reconfig", "replica": j,
+                "layers": [p.layer for p in plans if p.reconfigure],
+                "gain_bytes": float(sum(
+                    p.gain_bytes for p in plans if p.reconfigure
+                )),
+            })
+
+    # -- progress tracking ----------------------------------------------------
+    def _poll(self, j: int) -> None:
+        e = self.engines[j]
+        for r in e.batcher.finished[self._polled[j]:]:
+            if r.error is None and r.rid not in self._done:
+                self._done[r.rid] = r
+                self._finish_tick[r.rid] = self.tick
+        self._polled[j] = len(e.batcher.finished)
+        for r in e.batcher.active:
+            if r is not None and r.out and r.rid not in self._first_out_tick:
+                self._first_out_tick[r.rid] = self.tick
+        for r in e.batcher.finished:
+            if r.error is None and r.out and r.rid not in self._first_out_tick:
+                self._first_out_tick[r.rid] = self.tick
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._queue) or any(
+            self.alive[j] and e.batcher.busy for j, e in enumerate(self.engines)
+        )
+
+    def step(self) -> None:
+        """One fleet tick: dispatch from the global queue, tick every busy
+        replica, poll completions, run the fleet-cadence reconfigure check."""
+        self._dispatch()
+        for j, e in enumerate(self.engines):
+            if not self.alive[j]:
+                continue  # failed replicas were polled once at failure time
+            if e.batcher.busy:
+                e.step()
+            self._poll(j)
+        self._maybe_reconfigure()
+        self.tick += 1
+
+    # -- driving a workload ---------------------------------------------------
+    def run(
+        self,
+        requests: list[FleetRequest],
+        *,
+        drain_at: dict[int, int] | None = None,
+        fail_at: dict[int, int] | None = None,
+        restore_at: dict[int, int] | None = None,
+    ) -> FleetReport:
+        """Serve fleet requests to completion.
+
+        ``drain_at`` / ``fail_at`` / ``restore_at`` map replica index ->
+        fleet tick, for scripted degradation scenarios (the fleet keeps
+        serving: handed-back work is re-steered the same tick)."""
+        drain_at = drain_at or {}
+        fail_at = fail_at or {}
+        restore_at = restore_at or {}
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        cursor = 0
+        event_ticks = sorted(
+            set(drain_at.values()) | set(fail_at.values())
+            | set(restore_at.values())
+        )
+        while self.tick < self.fcfg.max_ticks:
+            for j, t in drain_at.items():
+                if t == self.tick:
+                    self.drain_replica(j)
+            for j, t in fail_at.items():
+                if t == self.tick:
+                    self.fail_replica(j)
+            for j, t in restore_at.items():
+                if t == self.tick:
+                    self.restore_replica(j)
+            now_s = self.tick * self.fcfg.tick_s
+            while cursor < len(pending) and pending[cursor].arrival_s <= now_s:
+                self.submit(pending[cursor])
+                cursor += 1
+            if cursor >= len(pending) and not self.busy:
+                break
+            if not self.busy and cursor < len(pending):
+                # Idle gap: jump the clock to the next arrival, but never
+                # past a scheduled drain/fail/restore event.
+                nxt = math.ceil(
+                    pending[cursor].arrival_s / self.fcfg.tick_s
+                )
+                for et in event_ticks:
+                    if self.tick < et < nxt:
+                        nxt = et
+                        break
+                self.tick = max(self.tick + 1, nxt)
+                continue
+            self.step()
+        return self.report()
+
+    def report(self) -> FleetReport:
+        ok = list(self._done.values())
+        ttft = np.array(
+            [
+                self._first_out_tick[rid] - self._arrival_tick[rid]
+                for rid in self._done
+                if rid in self._first_out_tick
+            ],
+            dtype=np.float64,
+        )
+        pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
+        attain: dict[str, list[int]] = {}
+        for rid in self._done:
+            freq = self.records[rid]
+            hit = (
+                rid in self._first_out_tick
+                and (self._first_out_tick[rid] - self._arrival_tick[rid])
+                * self.fcfg.tick_s
+                <= freq.slo.ttft_target_s
+            )
+            attain.setdefault(freq.slo.name, []).append(int(hit))
+        return FleetReport(
+            requests=len(self.records),
+            completed=len(ok),
+            ticks=self.tick,
+            tokens_out=sum(len(r.out) for r in ok),
+            policy=self.fcfg.policy,
+            steer_reasons=dict(self._steer_reasons),
+            reconfig_events=self.reconfig_events,
+            ttft_ticks_p50=pct(ttft, 50),
+            ttft_ticks_p99=pct(ttft, 99),
+            slo_attainment={
+                k: float(np.mean(v)) for k, v in sorted(attain.items())
+            },
+            outputs={rid: list(r.out) for rid, r in self._done.items()},
+            per_replica=[e.report(0.0) for e in self.engines],
+        )

@@ -262,6 +262,44 @@ class PageAllocator:
         self.pages_reclaimed += freed
         return freed
 
+    # -- state round-trip (drain checkpoints, DESIGN.md §12) -------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable allocator state.
+
+        A drained engine's checkpoint must carry the page table, refcounts
+        and the prefix registry alongside the KV pools: a restored server
+        that kept the pools but lost the registry would re-prefill every
+        shared prefix (correct but slow), and one that lost refcounts would
+        free registry-held pages (corrupt).  Chained block hashes are Python
+        ints over tuples of ints — deterministic across processes (only str
+        hashing is seed-randomized), so the registry round-trips as plain
+        JSON.
+        """
+        return {
+            "table": self.table.tolist(),
+            "refcount": self.refcount.tolist(),
+            "free": list(self._free),
+            "registry": [[int(h), int(pid)] for h, pid in self._registry.items()],
+            "lru": [int(h) for h in self._lru],
+            "reserved": self._reserved.tolist(),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        table = np.asarray(state["table"], np.int32)
+        if table.shape != self.table.shape:
+            raise ValueError(
+                f"page table shape {table.shape} != {self.table.shape}"
+            )
+        self.table = table
+        self.refcount = np.asarray(state["refcount"], np.int32)
+        self._free = [int(p) for p in state["free"]]
+        self._registry = {int(h): int(pid) for h, pid in state["registry"]}
+        self._page_hash = {pid: h for h, pid in self._registry.items()}
+        self._lru = OrderedDict((int(h), None) for h in state["lru"])
+        self._reserved = np.asarray(state["reserved"], np.int64)
+        self.check_leaks()
+
     # -- invariants ------------------------------------------------------
 
     def check_leaks(self) -> None:

@@ -33,7 +33,7 @@ import dataclasses
 import numpy as np
 
 __all__ = ["TrafficMix", "MIXES", "SyntheticRequest", "WorkloadGenerator",
-           "clamp_requests"]
+           "clamp_requests", "SLOClass", "SLO_CLASSES", "slo_for"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +62,49 @@ class TrafficMix:
     # turns into page reuse instead of recomputed prefill.
     shared_prefix_tokens: int = 0
     shared_prefix_ratio: float = 0.0
+    # Replica-affinity churn: every ``region_churn_every_s`` seconds the
+    # region popularity ranking rotates by ``region_churn_rot`` positions, so
+    # the *hot* region migrates mid-stream.  This is the drift that makes a
+    # fleet's gate-locality steering eventually lose — the resident mix a
+    # replica reconfigured for stops matching its arrivals — and is the
+    # trigger for the steer-vs-reconfigure decision rule (DESIGN.md §12).
+    # Zero disables churn; mixes without it generate byte-identical streams
+    # to earlier versions.
+    region_churn_every_s: float = 0.0
+    region_churn_rot: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One admission-priority class (fleet scheduling, DESIGN.md §12).
+
+    ``priority`` orders the global admission queue (lower dispatches first);
+    ``ttft_target_s`` is the class's time-to-first-token objective, the
+    attainment denominator :func:`repro.core.netsim.simulate_fleet` reports.
+    """
+
+    name: str
+    priority: int
+    ttft_target_s: float
+
+
+# Priority classes for the named mixes.  Interactive chat is latency-critical,
+# agentic loops tolerate moderate queueing (the caller is a program), batch
+# jobs only care about completion.
+SLO_CLASSES: dict[str, SLOClass] = {
+    "chat": SLOClass("chat", priority=0, ttft_target_s=1.0),
+    "agentic": SLOClass("agentic", priority=1, ttft_target_s=4.0),
+    "agentic_shared": SLOClass("agentic_shared", priority=1, ttft_target_s=4.0),
+    "agentic_churn": SLOClass("agentic_churn", priority=1, ttft_target_s=4.0),
+    "batch_summarize": SLOClass("batch_summarize", priority=2, ttft_target_s=30.0),
+}
+
+_DEFAULT_SLO = SLOClass("default", priority=1, ttft_target_s=4.0)
+
+
+def slo_for(mix_name: str) -> SLOClass:
+    """SLO class for a mix name (unknown mixes get the mid-priority default)."""
+    return SLO_CLASSES.get(mix_name, _DEFAULT_SLO)
 
 
 # Named mixes the examples/benchmarks reference.  The shapes follow the
@@ -94,6 +137,16 @@ MIXES: dict[str, TrafficMix] = {
         out_min=16, out_max=128, out_zipf_a=0.9,
         num_regions=4, region_zipf_a=1.2,
         shared_prefix_tokens=64, shared_prefix_ratio=0.9,
+    ),
+    # Region-skewed agentic traffic whose hot region migrates every few
+    # seconds — the fleet-steering stress mix: locality steering must either
+    # follow the drift or trigger a replica reconfiguration.
+    "agentic_churn": TrafficMix(
+        "agentic_churn", rate_rps=6.0, arrival="bursty", burst_factor=3.0,
+        prompt_min=16, prompt_max=256, prompt_zipf_a=1.0,
+        out_min=16, out_max=128, out_zipf_a=0.9,
+        num_regions=4, region_zipf_a=1.6,
+        region_churn_every_s=8.0, region_churn_rot=1,
     ),
 }
 
@@ -195,6 +248,12 @@ class WorkloadGenerator:
         rp = (np.arange(1, m.num_regions + 1) ** -m.region_zipf_a).astype(float)
         rp /= rp.sum()
         regions = rng.choice(m.num_regions, size=num_requests, p=rp)
+        if m.region_churn_every_s > 0:
+            # Rotate the popularity ranking over time: the region drawn at
+            # Zipf rank k at time t is (k + rot * floor(t / every)) mod R, so
+            # the hot region walks around the ring deterministically.
+            shift = (arrivals // m.region_churn_every_s).astype(np.int64)
+            regions = (regions + m.region_churn_rot * shift) % m.num_regions
         # Shared prefixes (drawn only when configured, so mixes without them
         # generate byte-identical streams to earlier versions).
         if m.shared_prefix_tokens > 0:

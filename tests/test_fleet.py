@@ -1,0 +1,358 @@
+"""Fleet layer (DESIGN.md §12): cross-replica bit-exactness under every
+steering policy and fleet size (including forced failure and drain/restore),
+the drained-replica checkpoint round-trip, SLO-priority admission, the
+region-conditioned gate statistics, and the priced fleet netsim scenario
+(locality steering vs least-loaded vs the degradation gates)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import commruntime as comm
+from repro.core.controlplane import RegionGateStats
+from repro.core.netsim import SimModel, simulate_fleet
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.transformer import init_model
+from repro.parallel.sharding import make_plan
+from repro.serve.batching import Request
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.fleet import (
+    FleetConfig,
+    FleetEngine,
+    fleet_requests,
+    locality_score,
+)
+from repro.serve.workload import WorkloadGenerator, clamp_requests, slo_for
+
+PLAN = make_plan(None)
+
+
+def moe_cfg():
+    return ModelConfig(
+        "flt", "moe", 2, 32, 4, 2, 0, 64, dtype="float32", remat="none",
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff=32, capacity_factor=8.0,
+                      backend="mixnet", a2a_group=2, dispatch="dropless",
+                      decode_backend="dense"),
+    )
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = moe_cfg()
+    params, _ = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    gen = WorkloadGenerator("chat", seed=3, vocab_size=cfg.vocab_size)
+    raw = clamp_requests(gen.generate(8), prompt_max=16, max_new=5)
+    freqs = fleet_requests(raw, gen)
+    return cfg, params, freqs
+
+
+def make_replica(params, cfg, *, slots=2, paged=None):
+    scfg = ServeConfig(
+        slots=slots, max_len=32, num_devices=4, paged=paged,
+        external_control=True, num_regions=4, reconfig_min_gain=0.0,
+    )
+    return ServeEngine(jax.tree.map(lambda a: a, params), cfg, PLAN, scfg)
+
+
+def make_fleet(params, cfg, n, policy, **fkw):
+    engines = [make_replica(params, cfg) for _ in range(n)]
+    fkw.setdefault("reconfig_every", 3)
+    return FleetEngine(engines, FleetConfig(policy=policy, **fkw))
+
+
+def reference_outputs(params, cfg, freqs):
+    """Unsteered single-replica generation — the bit-exactness reference."""
+    eng = make_replica(params, cfg)
+    for fr in sorted(freqs, key=lambda f: (f.arrival_s, f.rid)):
+        eng.submit(Request(rid=fr.rid, prompt=fr.prompt,
+                           max_new_tokens=fr.max_new_tokens,
+                           eos_id=fr.eos_id, region=fr.region))
+    while eng.batcher.busy:
+        eng.step()
+    return {r.rid: list(r.out) for r in eng.batcher.finished if r.error is None}
+
+
+@pytest.fixture(scope="module")
+def reference(fleet_setup):
+    cfg, params, freqs = fleet_setup
+    ref = reference_outputs(params, cfg, freqs)
+    assert len(ref) == len(freqs)
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# cross-replica determinism (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["locality", "least_loaded", "round_robin"])
+@pytest.mark.parametrize("size", [1, 2, 4])
+def test_fleet_bit_exact_across_policies_and_sizes(
+    fleet_setup, reference, policy, size
+):
+    """Steered requests generate BIT-identical tokens to unsteered
+    single-replica generation, for every policy x fleet size."""
+    cfg, params, freqs = fleet_setup
+    fleet = make_fleet(params, cfg, size, policy)
+    rep = fleet.run(freqs)
+    assert rep.completed == len(freqs)
+    assert rep.outputs == reference
+    assert sum(rep.steer_reasons.values()) >= len(freqs)
+    if size > 1:
+        # steering actually spread work across replicas
+        assert len(set(fleet.assignment.values())) > 1
+
+
+def test_fleet_bit_exact_under_replica_failure(fleet_setup, reference):
+    """A replica failing mid-run loses its in-flight generation; the fleet
+    restarts that work elsewhere and every token stays bit-identical."""
+    cfg, params, freqs = fleet_setup
+    fleet = make_fleet(params, cfg, 3, "locality")
+    rep = fleet.run(freqs, fail_at={0: 4})
+    assert rep.completed == len(freqs)
+    assert rep.outputs == reference
+    assert not fleet.alive[0]
+    fails = [d for d in fleet.decision_log if d["kind"] == "fail"]
+    assert fails and fails[0]["replica"] == 0
+
+
+def test_fleet_bit_exact_under_drain_and_restore(fleet_setup, reference):
+    """Draining a replica re-steers its queued work and stops admissions to
+    it until restore; tokens stay bit-identical throughout."""
+    cfg, params, freqs = fleet_setup
+    fleet = make_fleet(params, cfg, 2, "locality")
+    rep = fleet.run(freqs, drain_at={1: 2}, restore_at={1: 8})
+    assert rep.completed == len(freqs)
+    assert rep.outputs == reference
+    kinds = [d["kind"] for d in fleet.decision_log]
+    assert "drain" in kinds and "restore" in kinds
+    # no admission steered to the draining replica while it was down
+    for d in fleet.decision_log:
+        if d["kind"] == "steer" and 2 <= d["tick"] < 8:
+            assert d["replica"] != 1
+
+
+def test_fleet_slo_priority_admission(fleet_setup):
+    """With both classes queued at once, chat (priority 0) dispatches before
+    batch (priority 2) regardless of submission order."""
+    cfg, params, freqs = fleet_setup
+    batch = dataclasses.replace(
+        freqs[0], rid=900, arrival_s=0.0, slo=slo_for("batch_summarize")
+    )
+    chat = dataclasses.replace(
+        freqs[1], rid=901, arrival_s=0.0, slo=slo_for("chat")
+    )
+    fleet = make_fleet(params, cfg, 1, "least_loaded")
+    fleet.submit(batch)  # lower priority submitted FIRST
+    fleet.submit(chat)
+    while fleet.busy:
+        fleet.step()
+    steers = [d for d in fleet.decision_log if d["kind"] == "steer"]
+    assert [d["rid"] for d in steers] == [901, 900]
+    rep = fleet.report()
+    assert rep.completed == 2
+    assert set(rep.slo_attainment) == {"chat", "batch_summarize"}
+
+
+# ---------------------------------------------------------------------------
+# drain checkpoint round-trip (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_drain_checkpoint_restore_bit_identical(tmp_path):
+    """Drain a paged replica mid-run, checkpoint it (KV pools + allocator +
+    placement), restore into a FRESH engine, re-admit the handed-back work:
+    the union of tokens is bit-identical to one uninterrupted run, and the
+    warm prefix registry survives the round-trip."""
+    cfg = moe_cfg()
+    params, _ = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    gen = WorkloadGenerator("agentic_shared", seed=9, vocab_size=cfg.vocab_size)
+    raw = clamp_requests(gen.generate(6), prompt_max=20, max_new=4)
+    freqs = fleet_requests(raw, gen)
+    ref = reference_outputs(params, cfg, freqs)
+
+    eng_a = make_replica(params, cfg, paged=True)
+    for fr in freqs[:4]:
+        eng_a.submit(Request(rid=fr.rid, prompt=fr.prompt,
+                             max_new_tokens=fr.max_new_tokens,
+                             region=fr.region))
+    for _ in range(3):
+        if eng_a.batcher.busy:
+            eng_a.step()
+    handed = eng_a.drain()  # queued-but-unstarted hand back
+    with pytest.raises(RuntimeError):
+        eng_a.submit(Request(rid=999, prompt=freqs[0].prompt,
+                             max_new_tokens=2))
+    while eng_a.batcher.busy:  # finish in-flight work
+        eng_a.step()
+    step = eng_a.save_checkpoint(str(tmp_path))
+    done_a = {r.rid: list(r.out) for r in eng_a.batcher.finished
+              if r.error is None}
+
+    eng_b = make_replica(params, cfg, paged=True)
+    eng_b.restore_checkpoint(str(tmp_path), step)
+    # allocator state (page table, refcounts, prefix registry) survived
+    np.testing.assert_array_equal(eng_b.batcher.alloc.table,
+                                  eng_a.batcher.alloc.table)
+    assert eng_b.batcher.alloc._registry == eng_a.batcher.alloc._registry
+    assert len(eng_b.batcher.alloc._registry) > 0
+    hits_before = eng_b.batcher.alloc.prefix_hit_pages
+
+    resume = {fr.rid for fr in freqs} - set(done_a)
+    for fr in freqs:
+        if fr.rid in resume:
+            eng_b.submit(Request(rid=fr.rid, prompt=fr.prompt,
+                                 max_new_tokens=fr.max_new_tokens,
+                                 region=fr.region))
+    while eng_b.batcher.busy:
+        eng_b.step()
+    done_b = {r.rid: list(r.out) for r in eng_b.batcher.finished
+              if r.error is None}
+    assert set(done_a) | set(done_b) == {fr.rid for fr in freqs}
+    assert {**done_a, **done_b} == ref
+    # agentic_shared same-region re-sends hit the restored warm registry
+    assert eng_b.batcher.alloc.prefix_hit_pages > hits_before
+    assert len(handed) + len(done_a) >= 4
+
+
+# ---------------------------------------------------------------------------
+# locality scoring + region-conditioned gate stats (units)
+# ---------------------------------------------------------------------------
+
+
+def test_locality_score_orders_by_residency_then_load():
+    hot = np.array([0.7, 0.1, 0.1, 0.1])
+    cold = np.array([0.1, 0.1, 0.1, 0.7])
+    assert locality_score(hot, hot) < locality_score(hot, cold)
+    assert locality_score(hot, None) >= 1.0  # no stats = worst-case miss
+    # the load term breaks residency ties
+    assert locality_score(hot, hot, backlog=4, slots=4) > locality_score(
+        hot, hot, backlog=0, slots=4
+    )
+    # placement fit penalizes a mix the current perm concentrates
+    assert locality_score(hot, hot, placement_fit=1.0) > locality_score(
+        hot, hot, placement_fit=0.0
+    )
+
+
+def test_workload_region_churn_migrates_hot_region():
+    """The agentic_churn stress mix: the hot region rotates every
+    region_churn_every_s seconds — the drift that forces the
+    steer-vs-reconfigure decision (steering alone must eventually lose)."""
+    from repro.serve.workload import MIXES
+
+    m = MIXES["agentic_churn"]
+    assert m.region_churn_every_s > 0
+    gen = WorkloadGenerator("agentic_churn", seed=2)
+    reqs = gen.generate(400)
+    epochs: dict[int, list[int]] = {}
+    for r in reqs:
+        epochs.setdefault(int(r.arrival_s // m.region_churn_every_s),
+                          []).append(r.region)
+    hot = {e: max(set(v), key=v.count) for e, v in epochs.items()
+           if len(v) >= 10}
+    assert len(set(hot.values())) > 1, "hot region never migrated"
+    # consecutive well-sampled epochs rotate by region_churn_rot
+    keys = sorted(hot)
+    for a, b in zip(keys, keys[1:]):
+        if b == a + 1:
+            assert hot[b] == (hot[a] + m.region_churn_rot) % m.num_regions
+    # determinism: churn is a pure function of (seed, arrivals)
+    assert WorkloadGenerator("agentic_churn", seed=2).generate(400) == reqs
+
+
+def test_region_gate_stats_learn_merge_roundtrip():
+    st = RegionGateStats(num_regions=2, num_layers=2, num_experts=4)
+    assert st.mix_for(0) is None  # cold until confidence accumulates
+    load = np.array([[8.0, 1.0, 1.0, 0.0], [0.0, 1.0, 1.0, 8.0]])
+    for _ in range(6):
+        st.observe({0: 1.0}, load)
+    m0 = st.mix_for(0)
+    assert m0 is not None and m0.shape == (2, 4)
+    assert m0[0].argmax() == 0 and m0[1].argmax() == 3
+    assert st.mix_for(1) is None  # region 1 never observed
+    # merged stats weight by confidence
+    other = RegionGateStats(num_regions=2, num_layers=2, num_experts=4)
+    for _ in range(6):
+        other.observe({1: 1.0}, load[::-1])
+    merged = RegionGateStats.merged([st, other, None])
+    assert merged is not None
+    assert merged.mix_for(0)[0].argmax() == 0
+    assert merged.mix_for(1)[0].argmax() == 3
+    # state round-trip
+    clone = RegionGateStats(num_regions=2, num_layers=2, num_experts=4)
+    clone.load_state_dict(st.state_dict())
+    np.testing.assert_allclose(clone.mix, st.mix)
+    np.testing.assert_allclose(clone.weight, st.weight)
+
+
+# ---------------------------------------------------------------------------
+# priced fleet netsim (satellites: goodput-per-dollar gates + a2a cross-check)
+# ---------------------------------------------------------------------------
+
+
+def _sim_model():
+    return SimModel(
+        name="flt-sim", num_blocks=8, d_model=1024, d_ff=4096,
+        num_experts=16, top_k=2, num_heads=16, ep_degree=16, tp_degree=1,
+        pp_degree=1, overlap_chunks=2,
+    )
+
+
+_SIM_KW = dict(num_replicas=4, num_requests=48, mixes=("chat", "agentic"),
+               seed=0, arrival_scale=0.05)
+
+
+def test_simulate_fleet_locality_beats_least_loaded():
+    """The acceptance gate: on the region-skewed mix, gate-locality steering
+    buys more goodput per dollar than least-loaded (fewer placement flaps,
+    smaller resident expert working sets)."""
+    model = _sim_model()
+    loc = simulate_fleet(model, policy="locality", **_SIM_KW)
+    ll = simulate_fleet(model, policy="least_loaded", **_SIM_KW)
+    assert loc.completed == loc.requests
+    assert ll.completed == ll.requests
+    assert loc.goodput_per_mdollar > ll.goodput_per_mdollar
+    # the steer-vs-reconfigure rule: steering absorbs what least-loaded
+    # pays for in placement rewrites
+    assert loc.reconfig_blocked_s <= ll.reconfig_blocked_s
+    assert set(loc.slo_attainment) == {"chat", "agentic"}
+    # replica a2a accounting ties to the CommRuntime formula exactly
+    for j in range(loc.num_replicas):
+        expect = model.layers_per_stage * comm.ep_alltoall_bytes(
+            loc.replica_routed_tokens[j], model.top_k, model.d_model,
+            model.dtype_bytes,
+        )
+        assert abs(loc.replica_a2a_bytes[j] - expect) < 1e-6
+
+
+def test_simulate_fleet_degrades_gracefully():
+    """One replica draining or failing mid-run: no admission deadlock, every
+    request completes, SLO classes stay attainable."""
+    model = _sim_model()
+    for event in ({"drain": (1, 200)}, {"fail": (0, 200)}):
+        r = simulate_fleet(model, policy="locality", **_SIM_KW, **event)
+        assert r.completed == r.requests, f"stranded work under {event}"
+        assert r.tokens_out > 0 and r.goodput_per_mdollar > 0
+        assert set(r.slo_attainment) == {"chat", "agentic"}
+        assert all(v > 0.5 for v in r.slo_attainment.values())
+
+
+def test_simulate_fleet_deterministic_and_priced():
+    model = _sim_model()
+    kw = dict(num_replicas=2, num_requests=24, mixes=("chat",), seed=5,
+              arrival_scale=0.05)
+    a = simulate_fleet(model, policy="locality", **kw)
+    b = simulate_fleet(model, policy="locality", **kw)
+    assert a.breakdown() == b.breakdown()
+    assert a.fleet_cost_usd > 0 and a.cross_tier_cost_usd > 0
+    assert a.goodput_per_mdollar == pytest.approx(
+        a.goodput_tok_s / ((a.fleet_cost_usd + a.cross_tier_cost_usd) / 1e6)
+    )
+    # a single-replica fleet has no cross-region tier to pay for
+    single = simulate_fleet(model, policy="least_loaded", num_replicas=1,
+                            num_requests=12, mixes=("chat",), seed=5,
+                            arrival_scale=0.05)
+    assert single.cross_tier_cost_usd == 0.0

@@ -1,0 +1,147 @@
+"""Benchmark-regression guard: re-validate every committed BENCH_*.json.
+
+``PYTHONPATH=src python -m benchmarks.check_regressions [--root DIR]``
+
+Each benchmark that carries an acceptance gate records the measured ratio
+next to the gate it had to clear.  This script walks all committed
+``BENCH_*.json`` histories and fails (exit 1) when any entry's gated
+metric sits below its gate — i.e. when a regression was *committed*, not
+merely measured.  Two gate encodings are understood:
+
+* the generic form: an entry-level ``"gates"`` dict mapping a dotted path
+  into the entry (``"headline.ratio_400G"``, ``"curve.0.ratio"``) to the
+  minimum acceptable value (``BENCH_paper_scale.json`` writes this);
+* legacy per-file rules for the histories that predate the generic form
+  (serve/fleet/paged/spec ratios, collectives bit-identity, copilot
+  refit deviation).
+
+Entries whose file has no rule and no ``gates`` dict are ignored — wall
+-clock microbenchmarks drift with the host and are tracked, not gated.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def _dig(entry, dotted: str):
+    cur = entry
+    for part in dotted.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        else:
+            cur = cur[part]
+    return cur
+
+
+def _generic_gates(entry: dict) -> list[str]:
+    """Entry-level ``gates`` dict: dotted path -> minimum value."""
+    failures = []
+    for path, floor in entry.get("gates", {}).items():
+        try:
+            val = _dig(entry, path)
+        except (KeyError, IndexError, ValueError, TypeError):
+            failures.append(f"gated path {path!r} missing from entry")
+            continue
+        if not float(val) >= float(floor):
+            failures.append(f"{path} = {val} < gate {floor}")
+    return failures
+
+
+# Legacy rules: file basename -> fn(entry) -> list of failure strings.
+def _serve(entry):
+    r = entry.get("goodput_per_dollar_ratio")
+    return [] if r is None or r >= 1.0 else [f"goodput_per_dollar_ratio {r} < 1.0"]
+
+
+def _fleet(entry):
+    r = entry.get("locality_over_least_loaded")
+    return [] if r is None or r >= 1.0 else [f"locality_over_least_loaded {r} < 1.0"]
+
+
+def _paged(entry):
+    r = entry.get("netsim", {}).get("goodput_per_dollar_ratio")
+    return [] if r is None or r > 1.0 else [f"netsim goodput_per_dollar_ratio {r} <= 1.0"]
+
+
+def _spec(entry):
+    curve = entry.get("netsim", {}).get("curve") or []
+    if not curve:
+        return []
+    last = curve[-1].get("goodput_per_dollar_ratio", 1.0)
+    return [] if last >= 1.0 else [f"high-acceptance ratio {last} < 1.0"]
+
+
+def _collectives(entry):
+    ok = entry.get("fused_bit_identical", True)
+    return [] if ok else ["fused a2a no longer bit-identical"]
+
+
+def _copilot(entry):
+    dev = entry.get("max_transition_deviation")
+    return [] if dev is None or dev <= 1e-5 else [f"refit deviation {dev} > 1e-5"]
+
+
+def _moe_dispatch(entry):
+    s = entry.get("speedup")
+    return [] if s is None or s >= 1.0 else [f"sort dispatch speedup {s} < 1.0"]
+
+
+LEGACY_RULES = {
+    "BENCH_serve.json": _serve,
+    "BENCH_fleet.json": _fleet,
+    "BENCH_paged.json": _paged,
+    "BENCH_spec.json": _spec,
+    "BENCH_collectives.json": _collectives,
+    "BENCH_copilot.json": _copilot,
+    "BENCH_moe_dispatch.json": _moe_dispatch,
+}
+
+
+def check_file(path: str) -> list[str]:
+    name = os.path.basename(path)
+    with open(path) as f:
+        history = json.load(f)
+    if not isinstance(history, list):
+        history = [history]
+    rule = LEGACY_RULES.get(name)
+    failures = []
+    for i, entry in enumerate(history):
+        if not isinstance(entry, dict):
+            continue
+        for msg in _generic_gates(entry):
+            failures.append(f"{name}[{i}]: {msg}")
+        if rule is not None:
+            for msg in rule(entry):
+                failures.append(f"{name}[{i}]: {msg}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--root",
+        default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    args = ap.parse_args()
+    paths = sorted(glob.glob(os.path.join(args.root, "BENCH_*.json")))
+    if not paths:
+        print("no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    failures = []
+    for p in paths:
+        msgs = check_file(p)
+        failures.extend(msgs)
+        status = "FAIL" if msgs else "ok"
+        print(f"{os.path.basename(p)}: {status}")
+    for msg in failures:
+        print(f"REGRESSION: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

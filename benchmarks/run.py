@@ -26,6 +26,7 @@ claims, next to the paper's value:
   serve                    reconfigurable serving engine + priced scenario (BENCH_serve.json)
   fleet                    multi-replica steering: locality vs least-loaded vs one big replica (BENCH_fleet.json)
   spec_decode              speculative vs serial decode + priced acceptance sweep (BENCH_spec.json)
+  paper_scale              32-1024 GPU goodput-per-dollar curves + cached autotuner (BENCH_paper_scale.json)
   kernels                  Pallas-kernel oracle timings (framework table)
 """
 
@@ -1279,6 +1280,124 @@ def spec_decode(fast=False):
         json.dump(history, f, indent=2)
 
 
+def paper_scale(fast=False):
+    """Paper-scale composition (DESIGN.md §13, BENCH_paper_scale.json).
+
+    (a) Headline gates: MixNet-vs-fat-tree goodput-per-dollar for Mixtral
+    8x7B on the 1024-GPU fabric must land in the paper's Fig 13 bands —
+    >= 1.2x at 100 Gbps, >= 1.9x at 400 Gbps (gated every run).
+    (b) Scale curve: the same ratio across 32-1024 GPU cluster shapes
+    (``scale_layout`` re-factors EP x TP x PP per size), with the
+    pipeline-tier bubble-filling overlap on — the advantage must hold
+    (> 1.0) at every size.
+    (c) Cached autotuner: :mod:`repro.core.autotune` grid-searches
+    overlap_chunks x dispatch x a2a lowering x dp_compress per model and
+    writes ``autotune_cache.json`` (the same file the trainer consumes);
+    tuned goodput must be >= the default constants on BOTH tuned models.
+    The recorded ``gates`` dict is what benchmarks/check_regressions.py
+    re-validates in CI."""
+    import dataclasses as dc
+    import json
+    import os
+
+    from repro.configs.paper_models import (
+        MIXTRAL_8X7B,
+        QWEN_MOE,
+        scale_layout,
+    )
+    from repro.core import autotune
+    from repro.core import cost as costm
+    from repro.core.fabric import FabricConfig, make_fabric
+    from repro.core.netsim import simulate_training
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def goodput_per_dollar(model, fname, gbps, servers, iters):
+        fab = make_fabric(fname, FabricConfig(num_servers=servers, link_gbps=gbps))
+        res = simulate_training(
+            model, fab, iterations=iters, use_copilot=(fname == "mixnet")
+        )[1:]
+        t = float(np.mean([r.total for r in res]))
+        kept = float(np.mean([r.kept_fraction for r in res]))
+        toks = model.num_microbatches * model.tokens_per_microbatch
+        return kept * toks / t / costm.fabric_cost(fname, servers, gbps)
+
+    # --- (a) headline gates -------------------------------------------------
+    iters = 3 if fast else 5
+    headline = {}
+    for gbps in (100, 400):
+        r_mix = goodput_per_dollar(MIXTRAL_8X7B, "mixnet", gbps, 128, iters)
+        r_ft = goodput_per_dollar(MIXTRAL_8X7B, "fat-tree", gbps, 128, iters)
+        headline[f"ratio_{gbps}G"] = round(r_mix / r_ft, 3)
+        _row(
+            f"paper_scale/headline_{gbps}G", 0.0,
+            f"goodput_per_dollar_vs_ft={r_mix/r_ft:.2f}x "
+            f"(paper: {'1.2-1.5x' if gbps == 100 else '1.9-2.3x'})",
+        )
+    gates = {"headline.ratio_100G": 1.2, "headline.ratio_400G": 1.9}
+    assert headline["ratio_100G"] >= 1.2, headline
+    assert headline["ratio_400G"] >= 1.9, headline
+
+    # --- (b) 32-1024 GPU scale curve (pipeline-tier overlap on) -------------
+    sizes = (32, 128) if fast else (32, 128, 512, 1024)
+    curve = []
+    for gpus in sizes:
+        m = dc.replace(scale_layout(MIXTRAL_8X7B, gpus), pp_overlap=True)
+        servers = max(gpus // 8, 4)
+        r_mix = goodput_per_dollar(m, "mixnet", 400, servers, 3)
+        r_ft = goodput_per_dollar(m, "fat-tree", 400, servers, 3)
+        ratio = r_mix / r_ft
+        curve.append({
+            "gpus": gpus,
+            "layout": f"ep{m.ep_degree}xtp{m.tp_degree}xpp{m.pp_degree}",
+            "ratio": round(ratio, 3),
+        })
+        gates[f"curve.{len(curve) - 1}.ratio"] = 1.0
+        _row(
+            f"paper_scale/curve_{gpus}gpus", 0.0,
+            f"layout=ep{m.ep_degree}xtp{m.tp_degree}xpp{m.pp_degree} "
+            f"goodput_per_dollar_vs_ft={ratio:.2f}x",
+        )
+        assert ratio > 1.0, (gpus, ratio)
+
+    # --- (c) cached autotuner: tuned >= default on two model configs --------
+    cache_path = os.path.join(root, "autotune_cache.json")
+    tuned = {}
+    for model in (MIXTRAL_8X7B, QWEN_MOE):
+        r = autotune.tune(
+            model, "mixnet", 400, cache_path=cache_path,
+            iterations=2, refresh=not fast,
+        )
+        tuned[model.name] = {
+            "key": r.key,
+            "knobs": r.knobs,
+            "speedup": round(r.speedup, 3),
+        }
+        gates[f"autotune.{model.name}.speedup"] = 1.0
+        _row(
+            f"paper_scale/autotune_{model.name}", 0.0,
+            f"tuned_over_default={r.speedup:.3f}x knobs={r.knobs} "
+            f"(cache: autotune_cache.json)",
+        )
+        assert r.speedup >= 1.0, (model.name, r.speedup)
+
+    entry = {
+        "bench": "paper_scale",
+        "headline": headline,
+        "curve": curve,
+        "autotune": tuned,
+        "gates": gates,
+    }
+    path = os.path.join(root, "BENCH_paper_scale.json")
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
 def kernels(fast=False):
     """Framework table: Pallas kernels validated against oracles (interpret)
     + oracle-path timings on CPU."""
@@ -1371,6 +1490,7 @@ ALL = {
     "fleet": fleet,
     "paged_decode": paged_decode,
     "spec_decode": spec_decode,
+    "paper_scale": paper_scale,
     "kernels": kernels,
     "beyond_placement": beyond_placement,
     "beyond_a2a_hierarchy": beyond_a2a_hierarchy,

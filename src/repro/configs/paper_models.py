@@ -29,6 +29,35 @@ SIM_MODELS = {
     m.name: m for m in (MIXTRAL_8X7B, MIXTRAL_8X22B, QWEN_MOE, DEEPSEEK_R1)
 }
 
+# ---- paper-scale cluster shapes (Fig 26's sweep axis, DESIGN.md §13) ------
+
+PAPER_SCALE_GPUS = (32, 64, 128, 256, 512, 1024)
+
+
+def scale_layout(model: SimModel, num_gpus: int) -> SimModel:
+    """Re-layout ``model``'s parallelism onto a ``num_gpus`` cluster.
+
+    TP stays at the model's native degree (it is shape-bound: head count /
+    d_ff divisibility); PP absorbs what the depth allows, EP takes the
+    rest — the same priority order the paper's Table 1 layouts follow.
+    Raises when ``num_gpus`` cannot be factored over the model's shape.
+    """
+    import dataclasses
+
+    tp = model.tp_degree
+    if num_gpus % tp:
+        raise ValueError(f"{num_gpus} GPUs not divisible by tp={tp}")
+    rest = num_gpus // tp
+    # Deepest pipeline the block count supports without exceeding the
+    # model's native stage count or the remaining GPU budget.
+    pp = model.pp_degree
+    while pp > 1 and (rest % pp or model.num_blocks % pp):
+        pp //= 2
+    ep = rest // pp
+    if ep < 1:
+        raise ValueError(f"{num_gpus} GPUs too few for tp={tp} x pp={pp}")
+    return dataclasses.replace(model, ep_degree=ep, tp_degree=tp, pp_degree=pp)
+
 # ---- trainable Mixtral-8x7B (prototype-scale examples, Fig 10) ------------
 
 MIXTRAL_8X7B_CONFIG = ModelConfig(

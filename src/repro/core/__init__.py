@@ -8,7 +8,7 @@ failure handling, shared by the trainer and the simulator).
 
 Data plane: :mod:`repro.core.commruntime` (the shared CommSpec/CollectiveOp
 runtime — hierarchical a2a, all-reduce, all-gather, with the byte/cost model
-the simulator prices; :mod:`repro.core.collectives` is a deprecated shim).
+the simulator prices).
 
 Evaluation plane: :mod:`repro.core.fabric`, :mod:`repro.core.netsim`,
 :mod:`repro.core.cost` (the paper's §7 simulations).
@@ -29,16 +29,6 @@ from repro.core import (
 )
 
 __all__ = [
-    "collectives", "commruntime", "controlplane", "copilot", "cost", "fabric",
+    "commruntime", "controlplane", "copilot", "cost", "fabric",
     "netsim", "overlap", "placement", "reconfig", "topology", "traffic",
 ]
-
-
-def __getattr__(name):
-    if name == "collectives":
-        # Imported lazily so `import repro.core` does not fire the shim's
-        # DeprecationWarning — only actual shim users see it.
-        from repro.core import collectives
-
-        return collectives
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

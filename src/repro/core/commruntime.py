@@ -33,9 +33,9 @@ DP gradients use the paper's hierarchical all-reduce (§5.3): reduce-scatter
 inside the region, all-reduce across regions on the gateway shard,
 all-gather back.
 
-``repro.core.collectives`` is kept as a deprecated shim re-exporting the
-functional lowerings below; new code should build :class:`CommSpec` +
-ops (DESIGN.md §7).
+This module is the only home of the collective lowerings (the historical
+``repro.core.collectives`` shim has been removed); build :class:`CommSpec`
++ ops (DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -63,7 +63,7 @@ __all__ = [
     "device_perm_from_slots",
     "fuse_pack",
     "fuse_unpack",
-    # functional lowerings (re-exported by the repro.core.collectives shim)
+    # functional lowerings (the shard_map programs the ops execute)
     "flat_all_to_all",
     "hierarchical_all_to_all",
     "mixnet_all_to_all",
@@ -538,7 +538,31 @@ class AllToAll(_OpBase):
     ordered by destination; returns ``[P, ...]`` ordered by source.  The
     spec's wire perms (or per-call overrides, for traced runtime values)
     re-address chunks exactly like an OCS cross-map push.
+
+    ``lowering`` selects the *priced* wire schedule (the analytic side the
+    netsim and the autotuner search over — DESIGN.md §13):
+
+    * ``"hier"``  — the delegation lowering (default): per-server
+      aggregation amortizes per-message overheads, the server-level demand
+      matrix is what the fabric schedules.  This is the lowering
+      ``__call__`` executes and the historical ``cost``.
+    * ``"flat"``  — no in-server delegation: the same bytes cross the
+      scale-out fabric but as ``group_size``x more (and smaller)
+      per-GPU messages, so every remote destination pays the per-message
+      propagation latency the delegation would have amortized.
+    * ``"ring"``  — store-and-forward ring: R-1 sequential neighbor hops,
+      each carrying the residual full payload over one p2p link.  Only
+      competitive when the payload is tiny and latency dominates; the
+      autotuner is expected to reject it at training payloads.
     """
+
+    lowering: str = "hier"
+
+    def __post_init__(self):
+        if self.lowering not in ("hier", "flat", "ring"):
+            raise ValueError(
+                f"unknown a2a lowering {self.lowering!r}; "
+                "expected 'hier', 'flat', or 'ring'")
 
     def __call__(self, x, *, dest_perm=None, src_perm=None):
         dest_perm, src_perm = self._perms(dest_perm, src_perm)
@@ -621,8 +645,22 @@ class AllToAll(_OpBase):
 
     def cost(self, fabric, demand: np.ndarray) -> float:
         """Completion seconds of one a2a phase with ``demand`` bytes between
-        servers, priced on ``fabric``'s link rates."""
-        return fabric.alltoall_time(self.route_demand(demand))
+        servers, priced on ``fabric``'s link rates under this op's
+        ``lowering`` (see the class docstring)."""
+        demand = np.asarray(self.route_demand(demand))
+        r = demand.shape[0]
+        if self.lowering == "ring" and r > 1:
+            per_hop = float(
+                max(demand.sum(axis=1).max(), demand.sum(axis=0).max())
+            )
+            return (r - 1) * fabric.p2p_time(per_hop)
+        base = fabric.alltoall_time(demand)
+        if self.lowering == "flat" and r > 1:
+            # Same wire bytes, group_size x more messages: each GPU pays the
+            # per-message latency for every remote server it talks to.
+            msgs = max(self.spec.group_size, 1) * (r - 1)
+            return base + msgs * fabric.cfg.propagation_delay_s
+        return base
 
 
 @dataclasses.dataclass(frozen=True)

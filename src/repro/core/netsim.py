@@ -89,6 +89,23 @@ class SimModel:
     # dp_compress path): wire bytes scale by 1/dtype_bytes through the SAME
     # AllReduce byte accounting.
     dp_compress: bool = False
+    # A2A pricing lowering (commruntime.AllToAll.lowering, DESIGN.md §13):
+    # "hier" (delegation, default), "flat" (per-GPU messages, pays the
+    # per-message latency delegation amortizes), or "ring" (store-and-
+    # forward; latency-optimal only for tiny payloads).
+    a2a_lowering: str = "hier"
+    # MoE dispatch mode: "dropless" routes every token (full a2a payload);
+    # "capacity" caps each expert at capacity_factor * fair share — dropped
+    # tokens skip the wire AND the expert FFN, but goodput only counts kept
+    # tokens (IterationResult.kept_fraction), so the autotuner sees a real
+    # throughput-vs-quality tradeoff, not a free discount.
+    moe_dispatch: str = "dropless"
+    capacity_factor: float = 1.25
+    # Pipeline-tier overlap (DESIGN.md §13): treat the GPipe warmup/drain
+    # bubble as a hideable window for comm the chunk tier left exposed —
+    # first the residual EP a2a, then the DP gradient reduce-scatter.  Off
+    # by default (the historical additive accounting).
+    pp_overlap: bool = False
 
     # ---- derived sizes -----------------------------------------------------
     @property
@@ -269,8 +286,19 @@ class IterationResult:
     # Overlap accounting (DESIGN.md §8): the additive a2a total splits into
     # the part hidden under the compute window by the chunked pipeline and
     # the part that stays on the critical path.  hidden + exposed == a2a.
+    # These two are the CHUNK tier; with ``pp_overlap`` the PIPELINE tier
+    # then absorbs up to ``pp_bubble`` seconds of the still-exposed comm
+    # into the warmup/drain idle slots (``pp_hidden_comm``) and the DP
+    # reduction after it (``dp_hidden``).  Final critical-path comm =
+    # ``exposed_comm - pp_hidden_comm``.
     hidden_comm: float = 0.0
     exposed_comm: float = 0.0
+    pp_hidden_comm: float = 0.0
+    dp_hidden: float = 0.0
+    # Fraction of routed tokens actually delivered (== 1.0 for dropless;
+    # < 1 when capacity dispatch drops overflow).  Goodput accounting
+    # multiplies token throughput by this.
+    kept_fraction: float = 1.0
     # Per-link-class bytes of ONE EP a2a phase, from the op's staged
     # accounting (AllToAllStage.bytes_on_link — the same numbers the
     # trainer's overlap scheduler consumes).
@@ -306,12 +334,20 @@ def _stage_times(
     event timeline (:func:`repro.core.overlap.pipelined_phase`) with
     ``model.overlap_chunks`` chunks; with 1 chunk the timeline IS the
     pre-overlap additive sum.  Returns ``(timeline_seconds,
-    additive_a2a_seconds, blocked_seconds, exposed_comm_seconds)``.
+    additive_a2a_seconds, blocked_seconds, exposed_comm_seconds,
+    kept_fraction)`` — the last is the routed-token fraction actually
+    delivered (capacity dispatch drops overflow tokens from both the wire
+    and the expert FFN; dropless keeps it at 1.0).
     """
     attn_f = model.attention_time_per_layer()
     exp_f = model.expert_time_per_layer()
     m = model.num_microbatches
     chunks = max(model.overlap_chunks, 1)
+    cap = (
+        model.capacity_factor / model.num_experts
+        if model.moe_dispatch == "capacity"
+        else None
+    )
     # Compute window available to hide one reconfiguration: the layer's
     # compute across the iteration's microbatches (fwd + bwd ~ 3x fwd).
     hide_window = m * (attn_f + exp_f)
@@ -319,9 +355,13 @@ def _stage_times(
     blocked = 0.0
     timeline = 0.0
     exposed = 0.0
+    kept_sum = 0.0
     for li in range(model.layers_per_stage):
         load = loads[li % loads.shape[0]]
-        demand = trace.device_demand(load, model, num_servers_region)
+        kept = float(np.minimum(load, cap).sum()) if cap is not None else 1.0
+        kept_sum += kept
+        exp_l = exp_f * kept
+        demand = trace.device_demand(load, model, num_servers_region) * kept
         # --- FP reconfig. For the layer's FIRST a2a the true matrix is not
         # yet known (§5.1): COPILOT predicts it (accurate prediction ->
         # near-matching circuits); without COPILOT the fabric keeps the
@@ -351,15 +391,16 @@ def _stage_times(
         # chunked dispatch/FFN/combine pipeline hides comm under the expert
         # window (bwd compute ~ 2x fwd, same a2a matrices).
         fp_t, fp_x = overlap.pipelined_phase(
-            t_disp, exp_f, t_comb, chunks, serial_prefix=attn_f
+            t_disp, exp_l, t_comb, chunks, serial_prefix=attn_f
         )
         bp_t, bp_x = overlap.pipelined_phase(
-            t_disp_bp, 2.0 * exp_f, t_comb_bp, chunks, serial_prefix=2.0 * attn_f
+            t_disp_bp, 2.0 * exp_l, t_comb_bp, chunks, serial_prefix=2.0 * attn_f
         )
         timeline += m * (fp_t + bp_t)
         exposed += m * (fp_x + bp_x)
         cp.observe(li, load * model.tokens_per_microbatch * model.top_k)
-    return timeline, a2a_total, blocked, exposed
+    kept_mean = kept_sum / max(model.layers_per_stage, 1)
+    return timeline, a2a_total, blocked, exposed, kept_mean
 
 
 def simulate_iteration(
@@ -387,14 +428,17 @@ def simulate_iteration(
     # The comm phases are priced through the SAME CollectiveOp API the
     # trainer executes; the spec's region/group factorization comes from the
     # fabric topology (servers x intra-server scale-up domain).
-    a2a_op = comm.AllToAll(comm.CommSpec.from_fabric(fabric, num_servers_region))
+    a2a_op = comm.AllToAll(
+        comm.CommSpec.from_fabric(fabric, num_servers_region),
+        lowering=model.a2a_lowering,
+    )
     dp_op = comm.AllReduce(comm.CommSpec(
         axis=None,
         axis_size=max(gpus_per_server, 1),
         group_size=max(gpus_per_server, 1),
         outer_size=max(fabric.cfg.num_servers, 1),
     ))
-    timeline, a2a, blocked, exposed = _stage_times(
+    timeline, a2a, blocked, exposed, kept = _stage_times(
         model, fabric, loads, trace, num_servers_region, controlplane, a2a_op
     )
     # 1F1B: the critical path stretches the per-stage work by (M+P-1)/M.
@@ -409,7 +453,19 @@ def simulate_iteration(
     dp_bytes = model.dp_gradient_bytes_per_server(gpus_per_server)
     dp_ratio = (1.0 / model.dtype_bytes) if model.dp_compress else 1.0
     dp = 0.5 * dp_op.cost(fabric, dp_bytes, compress_ratio=dp_ratio)
-    total = pipeline + blocked + dp
+    # Pipeline-tier overlap (DESIGN.md §13): the warmup/drain bubble is
+    # stage-idle time — the NICs are free, so comm the chunk tier left
+    # exposed can be deferred into those slots instead of stretching the
+    # critical path.  Exposed a2a fills the bubble first (it is produced
+    # throughout the schedule), the DP reduce-scatter takes what remains
+    # (gradients become final exactly as stages drain).  The floor is
+    # exact: pipeline - pp_hidden >= timeline (pure compute+residual path).
+    pp_hidden = 0.0
+    dp_hidden = 0.0
+    if model.pp_overlap:
+        pp_hidden = min(bubble, stretch * exposed)
+        dp_hidden = min(bubble - pp_hidden, dp)
+    total = pipeline + blocked + dp - pp_hidden - dp_hidden
     # Per-link bytes of one EP a2a phase through the op's staged accounting
     # (the identical AllToAllStage.bytes_on_link the trainer's scheduler
     # consumes for its chunk schedule).
@@ -430,6 +486,9 @@ def simulate_iteration(
         pp_bubble=bubble,
         hidden_comm=stretch * (a2a - exposed),
         exposed_comm=stretch * exposed,
+        pp_hidden_comm=pp_hidden,
+        dp_hidden=dp_hidden,
+        kept_fraction=kept,
         a2a_link_bytes=link_bytes,
     )
 

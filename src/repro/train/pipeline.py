@@ -11,8 +11,12 @@ schedule is a ``lax.scan`` over M + S - 1 ticks.  Differentiating through
 the scan yields the reverse pipeline automatically, so one definition
 serves forward and backward.
 
-Composes with the rest of the framework: inside a stage the block fn can be
-any `model_apply`-style function (TP/EP shardings on other mesh axes).
+This module is the bare schedule; the composition with the real training
+stack lives in :mod:`repro.train.pp_step` (``make_pp_train_step``): there the
+stage body runs the actual transformer blocks with the MoE mixnet data plane
+(dispatch a2a, ``overlap_chunks`` chunking, per-layer expert/wire perms) on
+the ``model`` mesh axis *inside* each stage, and the Trainer drives it via
+``TrainerConfig.pp_stages`` / ``num_microbatches`` (DESIGN.md §13).
 """
 
 from __future__ import annotations
@@ -71,7 +75,12 @@ def pipeline_apply(
             buf = carry
             # Stage 0 ingests microbatch t (when one is due); other stages
             # work on whatever arrived from the previous stage last tick.
-            feed = mbs[jnp.minimum(t, m - 1)]
+            # Past the last microbatch (drain ticks — every tick >= M when
+            # M < S) stage 0 feeds zeros, so the garbage riding the pipe is
+            # a fixed point of well-behaved stage fns instead of a stale
+            # re-fed microbatch; those ticks' outputs are discarded by the
+            # final slice either way.
+            feed = jnp.where(t < m, mbs[jnp.minimum(t, m - 1)], 0)
             x = jnp.where(stage_idx == 0, feed, buf)
             y = stage_fn(params_here, x)
             # Shift the pipe: stage i's output becomes stage i+1's input.

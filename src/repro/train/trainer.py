@@ -35,6 +35,7 @@ from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import ShardingPlan, virtual_experts
 from repro.train import checkpoint as ckpt
+from repro.train.pp_step import make_pp_train_step
 from repro.train.train_step import init_all, init_ef_residual, make_train_step
 
 # permute_expert_weights moved to repro.core.controlplane (it is shared with
@@ -62,6 +63,22 @@ class TrainerConfig:
     # reduction (requires dp_comm="runtime"); the trainer carries the
     # per-shard residual state across steps.
     dp_compress: bool = False
+    # Pipeline parallelism (DESIGN.md §13): pp_stages > 1 stacks block
+    # repeats on a 'stage' mesh axis and runs the GPipe schedule
+    # (repro.train.pp_step) with the MoE data plane live inside each stage;
+    # params/checkpoints/placement stay in the canonical [repeats, ...]
+    # layout.  num_microbatches also drives gradient accumulation for the
+    # non-PP step.
+    pp_stages: int = 1
+    num_microbatches: int = 1
+    # Cached autotuner (repro.core.autotune, DESIGN.md §13): when both are
+    # set and the key is present in the cache file, the trainer replaces the
+    # constant comm knobs (MoE overlap_chunks / dispatch mode, dp_compress
+    # where the mesh allows) with the tuned winners before building the
+    # step.  A cache miss is silently a no-op — tuning is done offline by
+    # the benchmark/netsim side, which shares the same cache file.
+    autotune_cache: str = ""
+    autotune_key: str = ""
     # Straggler watchdog: warn when a step exceeds ema * factor.
     straggler_factor: float = 3.0
 
@@ -77,6 +94,12 @@ class Trainer:
         mesh=None,
         seed: int = 0,
     ):
+        if tcfg.autotune_cache and tcfg.autotune_key:
+            from repro.core import autotune
+
+            tuned = autotune.load_cached(tcfg.autotune_cache, tcfg.autotune_key)
+            if tuned is not None:
+                cfg, tcfg = autotune.apply_to_trainer(cfg, tcfg, tuned)
         self.cfg = cfg
         self.opt_cfg = opt_cfg
         self.tcfg = tcfg
@@ -84,13 +107,25 @@ class Trainer:
         self.mesh = mesh
         key = jax.random.PRNGKey(seed)
         self.params, self.specs, self.opt_state = init_all(key, cfg, plan, opt_cfg)
-        self.step_fn = jax.jit(
-            make_train_step(
-                cfg, plan, opt_cfg, mesh=mesh, dp_comm=tcfg.dp_comm,
+        if tcfg.pp_stages > 1:
+            if tcfg.dp_comm != "auto" or tcfg.dp_compress:
+                raise ValueError(
+                    "pp_stages > 1 composes with dp_comm='auto' only (the "
+                    "runtime DP reduction needs a DP-only mesh)"
+                )
+            step = make_pp_train_step(
+                cfg, plan, opt_cfg, mesh,
+                pp_stages=tcfg.pp_stages,
+                microbatches=tcfg.num_microbatches,
+                block_specs=self.specs["blocks"],
+            )
+        else:
+            step = make_train_step(
+                cfg, plan, opt_cfg, mesh=mesh,
+                microbatches=tcfg.num_microbatches, dp_comm=tcfg.dp_comm,
                 dp_compress=tcfg.dp_compress,
-            ),
-            donate_argnums=(0, 1),
-        )
+            )
+        self.step_fn = jax.jit(step, donate_argnums=(0, 1))
         self.ef_residual = (
             init_ef_residual(self.params, plan) if tcfg.dp_compress else None
         )

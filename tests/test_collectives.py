@@ -1,18 +1,20 @@
 """Hierarchical (delegation) collectives == flat collectives, on 8 forced
 host devices in a subprocess (this process keeps 1 device).
 
-The first two tests exercise the deprecated ``repro.core.collectives`` shim
-on purpose (migration guarantee); the rest drive the CommRuntime spec/op API
-directly: group-size x wire-perm parity sweeps, the fused payload+metadata
-a2a (bit-identical to the unfused pair), and the AllGather ring lowering
-across axis sizes including P=1."""
+The first two tests drive the functional lowerings
+(``hierarchical_all_to_all`` / ``hierarchical_psum`` / ``ring_all_gather``);
+the rest drive the CommRuntime spec/op API directly: group-size x wire-perm
+parity sweeps, the fused payload+metadata a2a (bit-identical to the unfused
+pair), and the AllGather ring lowering across axis sizes including P=1.
+The historical ``repro.core.collectives`` shim is gone — a guard test keeps
+it from coming back as an import target."""
 
 import pytest
 
 HIER_A2A = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from repro.core.collectives import hierarchical_all_to_all, flat_all_to_all, hierarchical_psum
+from repro.core.commruntime import hierarchical_all_to_all, flat_all_to_all, hierarchical_psum
 
 from repro.launch.mesh import make_mesh as _compat_make_mesh
 from repro.parallel.sharding import shard_map as _compat_shard_map
@@ -53,7 +55,7 @@ def test_hierarchical_collectives_multidevice(multidevice):
 RING_AG = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from repro.core.collectives import ring_all_gather
+from repro.core.commruntime import ring_all_gather
 from repro.launch.mesh import make_mesh as _compat_make_mesh
 from repro.parallel.sharding import shard_map as _compat_shard_map
 mesh = _compat_make_mesh((8,), ('model',))
@@ -235,51 +237,36 @@ def test_allgather_op_single_device_no_mesh():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
 
 
-DEPRECATION = """
-import subprocess, sys, warnings
-
-# importing the package namespace must NOT warn (collectives is lazy there)
-with warnings.catch_warnings():
-    warnings.simplefilter('error', DeprecationWarning)
-    import repro.core
-    import repro.core.commruntime
-
-# importing the shim itself MUST warn
-with warnings.catch_warnings(record=True) as w:
-    warnings.simplefilter('always')
-    import repro.core.collectives as shim
-assert any(issubclass(x.category, DeprecationWarning) for x in w), w
-# the lazy attribute resolves to the same (now-imported) module
-assert repro.core.collectives is shim
-# and still re-exports the lowerings unchanged
-from repro.core.commruntime import hierarchical_all_to_all
-assert shim.hierarchical_all_to_all is hierarchical_all_to_all
-print('DEPRECATION_OK')
-"""
-
-
-def test_collectives_shim_deprecation(multidevice):
-    """Satellite: the shim warns on import; `import repro.core` does not, and
-    no in-repo module still imports the shim (all internal importers are
-    ported to commruntime)."""
-    out = multidevice(DEPRECATION, devices=1)
-    assert "DEPRECATION_OK" in out
-
-
-def test_no_internal_shim_importers():
+def test_collectives_shim_removed():
+    """The deprecated ``repro.core.collectives`` shim is deleted: importing
+    it fails, the package namespace no longer exposes it, and no in-repo
+    module (src or tests) references it as an import target."""
+    import importlib
     import os
     import re
 
-    root = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    import pytest as _pytest
+
+    import repro.core
+
+    with _pytest.raises(ImportError):
+        importlib.import_module("repro.core" + ".collectives")
+    with _pytest.raises(AttributeError):
+        repro.core.collectives  # noqa: B018
+    assert "collectives" not in repro.core.__all__
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(here)
     pat = re.compile(r"^\s*(from|import)\s+repro\.core\.collectives\b")
     offenders = []
-    for dirpath, _, files in os.walk(root):
-        for f in files:
-            if not f.endswith(".py") or f == "collectives.py":
-                continue
-            path = os.path.join(dirpath, f)
-            with open(path) as fh:
-                for line in fh:
-                    if pat.match(line):
-                        offenders.append(path)
+    for top in (os.path.join(root, "src"), here):
+        for dirpath, _, files in os.walk(top):
+            for f in files:
+                if not f.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, f)
+                with open(path) as fh:
+                    for line in fh:
+                        if pat.match(line):
+                            offenders.append(path)
     assert not offenders, offenders

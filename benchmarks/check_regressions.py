@@ -13,7 +13,7 @@ merely measured.  Two gate encodings are understood:
   minimum acceptable value (``BENCH_paper_scale.json`` writes this);
 * legacy per-file rules for the histories that predate the generic form
   (serve/fleet/paged/spec ratios, collectives bit-identity, copilot
-  refit deviation).
+  refit deviation, the enabled-tracing serve-tick overhead bound).
 
 Entries whose file has no rule and no ``gates`` dict are ignored — wall
 -clock microbenchmarks drift with the host and are tracked, not gated.
@@ -91,6 +91,13 @@ def _moe_dispatch(entry):
     return [] if s is None or s >= 1.0 else [f"sort dispatch speedup {s} < 1.0"]
 
 
+def _obs(entry):
+    f = entry.get("serve", {}).get("overhead_fraction")
+    return [] if f is None or f < 0.03 else [
+        f"enabled-tracing serve-tick overhead {f} >= 0.03"
+    ]
+
+
 LEGACY_RULES = {
     "BENCH_serve.json": _serve,
     "BENCH_fleet.json": _fleet,
@@ -99,6 +106,7 @@ LEGACY_RULES = {
     "BENCH_collectives.json": _collectives,
     "BENCH_copilot.json": _copilot,
     "BENCH_moe_dispatch.json": _moe_dispatch,
+    "BENCH_obs.json": _obs,
 }
 
 

@@ -27,6 +27,7 @@ claims, next to the paper's value:
   fleet                    multi-replica steering: locality vs least-loaded vs one big replica (BENCH_fleet.json)
   spec_decode              speculative vs serial decode + priced acceptance sweep (BENCH_spec.json)
   paper_scale              32-1024 GPU goodput-per-dollar curves + cached autotuner (BENCH_paper_scale.json)
+  observability            tracer throughput + serve-tick tracing overhead + §3 locality (BENCH_obs.json)
   kernels                  Pallas-kernel oracle timings (framework table)
 """
 
@@ -1398,6 +1399,156 @@ def paper_scale(fast=False):
         json.dump(history, f, indent=2)
 
 
+def observability(fast=False):
+    """Measurement plane (DESIGN.md §14, BENCH_obs.json).
+
+    (a) Tracer throughput: enabled span+counter emission rate into the ring
+    buffer, and the per-call cost of the disabled no-op path.
+    (b) Serve-tick overhead: ONE warmed engine decoding a chat-mix workload
+    with reconfiguration off (every tick does the same decode work);
+    tracer state follows an ABBA pattern (off-on-on-off) per 4-tick group,
+    and the statistic is the median of per-pair differences — pairing
+    cancels host drift, the ABBA order cancels the linear tick growth from
+    the lengthening KV cache, and the median rejects scheduler stalls.
+    Acceptance gate (re-checked by check_regressions.py): < 3%.
+    (c) The §3 traffic study from the same run: expert-locality score,
+    regional skew, and mean effective experts on the chat mix."""
+    import json
+    import os
+    import time
+
+    import jax
+
+    from repro.models.config import ModelConfig, MoEConfig
+    from repro.models.transformer import init_model
+    from repro.obs import trace
+    from repro.obs.trace import Tracer, validate_events
+    from repro.parallel.sharding import make_plan
+    from repro.serve.batching import Request
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.workload import MIXES, WorkloadGenerator
+
+    # --- (a) tracer micro-costs --------------------------------------------
+    n = 20_000 if fast else 100_000
+    tr = Tracer()
+    tr.enabled = True
+    tid = tr.track("bench")
+    t0 = time.perf_counter()
+    for i in range(n):
+        with tr.span("s", tid=tid):
+            pass
+        tr.counter("c", float(i), tid=tid)
+    dt = time.perf_counter() - t0
+    events_per_s = 2 * n / dt
+    assert validate_events(tr.events()[-1000:]) == []
+    tr.enabled = False
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tr.span("s"):
+            pass
+        tr.counter("c", 1.0)
+    disabled_ns = (time.perf_counter() - t0) / (2 * n) * 1e9
+    _row("observability/tracer", 0.0,
+         f"enabled={events_per_s/1e6:.2f}M events/s "
+         f"disabled={disabled_ns:.0f}ns/op")
+
+    # --- (b) serve-tick overhead, enabled vs disabled ----------------------
+    plan = make_plan(None)
+    cfg = ModelConfig(
+        "obs", "moe", 2, 32, 4, 2, 0, 64, dtype="float32", remat="none",
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff=32, capacity_factor=8.0,
+                      backend="mixnet"),
+    )
+    params, _ = init_model(jax.random.PRNGKey(0), cfg, plan)
+    mix = MIXES["chat"]
+    gen = WorkloadGenerator("chat", seed=3, vocab_size=cfg.vocab_size)
+    scfg = ServeConfig(slots=2, max_len=2048, num_devices=4,
+                       num_regions=mix.num_regions)
+    eng = ServeEngine(params, cfg, plan, scfg)
+    # Identical prompt lengths (one prefill shape, compiled in warmup) and
+    # decode budgets far past the measurement horizon: no request finishes
+    # or is admitted mid-measurement, so every timed tick is the same
+    # 2-row decode.
+    for r in gen.generate(8):
+        eng.submit(Request(rid=r.rid, prompt=gen.prompt_tokens(r)[:16],
+                           max_new_tokens=2000, region=r.region))
+    trace.disable()
+    for _ in range(8):  # compile prefill + decode
+        eng.step()
+    import statistics
+
+    def _tick(enabled):
+        (trace.enable if enabled else trace.disable)()
+        t0 = time.perf_counter()
+        eng.step()
+        return time.perf_counter() - t0
+
+    groups = 40 if fast else 80  # ABBA groups of 4 ticks -> 2 pairs each
+    diffs, d_ticks, e_ticks = [], [], []
+    for _ in range(groups):
+        assert eng.batcher.busy, "workload drained mid-measurement"
+        d1 = _tick(False)
+        e1 = _tick(True)
+        e2 = _tick(True)
+        d2 = _tick(False)
+        diffs += [e1 - d1, e2 - d2]
+        d_ticks += [d1, d2]
+        e_ticks += [e1, e2]
+    trace.disable()
+    ticks = 4 * groups
+    med_d = statistics.median(d_ticks)
+    med_e = statistics.median(e_ticks)
+    overhead = statistics.median(diffs) / med_d
+    _row("observability/serve_tick", med_e * 1e6,
+         f"disabled_ms={med_d*1e3:.2f} enabled_ms={med_e*1e3:.2f} "
+         f"overhead={overhead*100:+.2f}% (gate: < 3%)")
+    assert overhead < 0.03, (
+        f"enabled tracing costs {overhead*100:.2f}% per serve tick (gate 3%)"
+    )
+    assert validate_events(trace.default().events()) == []
+    trace.default().clear()
+
+    # --- (c) the §3 study on the chat mix ----------------------------------
+    obs = eng.observatory
+    locality = obs.locality_score()
+    skew = obs.regional_skew()
+    eff = float(np.mean(obs.effective_experts()))
+    _row("observability/traffic_chat", 0.0,
+         f"locality={locality:.3f} regional_skew={skew:.3f} "
+         f"mean_effective_experts={eff:.2f} over {obs.ticks} ticks")
+    assert 0.0 <= locality <= 1.0
+
+    entry = {
+        "bench": "observability",
+        "tracer": {
+            "enabled_events_per_s": round(events_per_s, 1),
+            "disabled_ns_per_op": round(disabled_ns, 2),
+        },
+        "serve": {
+            "ticks_timed": ticks,
+            "disabled_us_per_tick": round(med_d * 1e6, 1),
+            "enabled_us_per_tick": round(med_e * 1e6, 1),
+            "overhead_fraction": round(overhead, 5),
+        },
+        "traffic": {
+            "mix": "chat",
+            "ticks": obs.ticks,
+            "locality_score": round(locality, 4),
+            "regional_skew": round(skew, 4),
+            "mean_effective_experts": round(eff, 3),
+        },
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_obs.json")
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
 def kernels(fast=False):
     """Framework table: Pallas kernels validated against oracles (interpret)
     + oracle-path timings on CPU."""
@@ -1491,6 +1642,7 @@ ALL = {
     "paged_decode": paged_decode,
     "spec_decode": spec_decode,
     "paper_scale": paper_scale,
+    "observability": observability,
     "kernels": kernels,
     "beyond_placement": beyond_placement,
     "beyond_a2a_hierarchy": beyond_a2a_hierarchy,

@@ -21,6 +21,7 @@ import jax
 
 from repro.configs import ARCH_NAMES, get_reduced
 from repro.models.transformer import init_model
+from repro.obs import metrics, trace
 from repro.parallel.sharding import make_plan
 from repro.serve.batching import Request
 from repro.serve.engine import ServeConfig, ServeEngine
@@ -55,7 +56,13 @@ def main():
     ap.add_argument("--restore-tick", type=int, default=10)
     ap.add_argument("--reconfig-every", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="export a Perfetto trace of the run to this path")
+    ap.add_argument("--metrics", default="",
+                    help="dump the metrics-registry snapshot to this path")
     args = ap.parse_args()
+    if args.trace:
+        trace.enable()
 
     cfg = get_reduced(args.arch)
     if cfg.encoder_layers or not cfg.is_moe:
@@ -107,6 +114,16 @@ def main():
     ref = {r.rid: list(r.out) for r in single.batcher.finished}
     assert rep.outputs == ref, "steering changed generated tokens"
     print("  parity: fleet tokens bit-identical to single-replica serving ✓")
+
+    if args.trace:
+        n = trace.export(args.trace)
+        failures = trace.validate_file(args.trace)
+        assert not failures, f"trace schema failures: {failures[:3]}"
+        print(f"  trace: {n} events -> {args.trace} (one merged timeline: "
+              "fleet + every replica; open in ui.perfetto.dev)")
+    if args.metrics:
+        metrics.default().to_json(args.metrics)
+        print(f"  metrics snapshot -> {args.metrics}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_reduced
 from repro.models.transformer import init_model
+from repro.obs import metrics, trace
 from repro.parallel.sharding import make_plan
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.workload import MIXES, WorkloadGenerator
@@ -51,7 +52,13 @@ def main():
     ap.add_argument("--num-devices", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-parity-check", action="store_true")
+    ap.add_argument("--trace", default="",
+                    help="export a Perfetto trace of the run to this path")
+    ap.add_argument("--metrics", default="",
+                    help="dump the metrics-registry snapshot to this path")
     args = ap.parse_args()
+    if args.trace:
+        trace.enable()
 
     cfg = get_reduced(args.arch)
     if cfg.encoder_layers:
@@ -120,6 +127,16 @@ def main():
         b = {r.rid: r.out for r in base.batcher.finished}
         assert a == b, "reconfiguration changed generated tokens"
         print("  parity: tokens bit-identical with reconfiguration off ✓")
+
+    if args.trace:
+        n = trace.export(args.trace)
+        failures = trace.validate_file(args.trace)
+        assert not failures, f"trace schema failures: {failures[:3]}"
+        print(f"  trace: {n} events -> {args.trace} (schema OK; open in "
+              "ui.perfetto.dev)")
+    if args.metrics:
+        metrics.default().to_json(args.metrics)
+        print(f"  metrics snapshot -> {args.metrics}")
 
 
 if __name__ == "__main__":

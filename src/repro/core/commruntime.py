@@ -48,9 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.obs import metrics
+
 __all__ = [
     "CommSpec",
     "LinkBytes",
+    "record_link_bytes",
     "CollectiveOp",
     "AllToAll",
     "AllReduce",
@@ -398,6 +401,37 @@ class LinkBytes:
         return self.scale_up + self.scale_out + self.cross_region
 
 
+_LB_COUNTERS: dict[tuple[str, str], metrics.Counter] = {}
+_LB_GENERATION = -1
+
+
+def record_link_bytes(op: str, lb: LinkBytes) -> None:
+    """Fold one priced phase's wire bytes into the process metrics registry
+    as ``comm.link_bytes{link=...,op=...}`` (DESIGN.md §14).
+
+    Called from every op's ``cost`` — each priced phase is one wire phase in
+    the simulated/accounted timeline.  Children are cached per (op, link)
+    tuple so the inner netsim loops pay one dict hit + one float add; the
+    cache is invalidated when the registry is reset (its generation bumps)."""
+    global _LB_GENERATION
+    reg = metrics.default()
+    if reg.generation != _LB_GENERATION:
+        _LB_GENERATION = reg.generation
+        _LB_COUNTERS.clear()
+    for link, v in (
+        ("scale_up", lb.scale_up),
+        ("scale_out", lb.scale_out),
+        ("cross_region", lb.cross_region),
+    ):
+        if v:
+            c = _LB_COUNTERS.get((op, link))
+            if c is None:
+                c = _LB_COUNTERS[(op, link)] = reg.counter(
+                    "comm.link_bytes", op=op, link=link
+                )
+            c.inc(v)
+
+
 def ep_alltoall_bytes(
     tokens: int, top_k: int, d_model: int, dtype_bytes: int
 ) -> float:
@@ -649,6 +683,12 @@ class AllToAll(_OpBase):
         ``lowering`` (see the class docstring)."""
         demand = np.asarray(self.route_demand(demand))
         r = demand.shape[0]
+        # Wire bytes this phase moves between servers (the diagonal stays
+        # local) — the per-op ledger of DESIGN.md §14.
+        offdiag = float(demand.sum())
+        if demand.ndim == 2 and demand.shape[0] == demand.shape[1]:
+            offdiag -= float(np.trace(demand))
+        record_link_bytes("a2a", LinkBytes(scale_out=max(offdiag, 0.0)))
         if self.lowering == "ring" and r > 1:
             per_hop = float(
                 max(demand.sum(axis=1).max(), demand.sum(axis=0).max())
@@ -798,6 +838,10 @@ class AllReduce(_OpBase):
         *, compress_ratio: float = 1.0,
     ) -> float:
         n = num_servers or (self.spec.outer_size if self.spec.outer_size > 1 else None)
+        record_link_bytes(
+            "allreduce",
+            self.bytes_on_link(bytes_per_server, compress_ratio=compress_ratio),
+        )
         return fabric.allreduce_time(bytes_per_server * compress_ratio, n)
 
 
@@ -831,6 +875,7 @@ class AllGather(_OpBase):
         p = self.spec.axis_size
         if p <= 1:
             return 0.0
+        record_link_bytes("allgather", self.bytes_on_link(shard_bytes))
         return (p - 1) * fabric.p2p_time(shard_bytes)
 
 
@@ -869,6 +914,7 @@ class ReduceScatter(_OpBase):
         p = self.spec.axis_size
         if p <= 1:
             return 0.0
+        record_link_bytes("reducescatter", self.bytes_on_link(nbytes))
         return (p - 1) * fabric.p2p_time(nbytes / p)
 
 
@@ -904,4 +950,5 @@ class Permute(_OpBase):
     def cost(self, fabric, nbytes: float) -> float:
         if self.spec.axis_size <= 1:
             return 0.0
+        record_link_bytes("permute", self.bytes_on_link(nbytes))
         return fabric.p2p_time(nbytes)

@@ -40,6 +40,7 @@ from repro.core.placement import (
     solve_expert_placement,
 )
 from repro.core.traffic import TrafficMonitor
+from repro.obs import metrics, trace
 
 __all__ = [
     "LayerPlan",
@@ -317,6 +318,12 @@ class ControlPlane:
             np.arange(self.num_virtual, dtype=np.int64), (num_layers, 1)
         )
         self.reconfig_count = 0
+        # Measurement plane (DESIGN.md §14): cached metric children so the
+        # per-step observe path stays one float add.
+        _m = metrics.default()
+        self._m_steps = _m.counter("controlplane.steps")
+        self._m_plan_go = _m.counter("controlplane.plans", verdict="reconfigure")
+        self._m_plan_hold = _m.counter("controlplane.plans", verdict="hold")
         # Per-replica region-conditioned stats (fleet steering, DESIGN.md §12).
         self.region_stats = (
             RegionGateStats(num_regions, num_layers, num_experts)
@@ -361,6 +368,7 @@ class ControlPlane:
     def end_step(self) -> None:
         """Close the step: advance the monitor window, refit COPILOT (one
         batched vmapped call across all layers)."""
+        self._m_steps.inc()
         self.monitor.advance()
         if self.copilot is not None:
             self.copilot.update(self.monitor)
@@ -380,6 +388,28 @@ class ControlPlane:
 
     # -- lifecycle: plan ------------------------------------------------------
     def plan(
+        self,
+        layer: int,
+        demand: np.ndarray | None = None,
+        *,
+        predicted: bool = False,
+    ) -> LayerPlan:
+        """Per-layer decision with its gain/hysteresis verdict journaled as
+        a structured reconfiguration audit event (DESIGN.md §14)."""
+        p = self._plan(layer, demand, predicted=predicted)
+        (self._m_plan_go if p.reconfigure else self._m_plan_hold).inc()
+        tr = trace.default()
+        if tr.enabled:
+            tr.audit("controlplane.plan", {
+                "layer": p.layer,
+                "reconfigure": p.reconfigure,
+                "gain_bytes": float(p.gain_bytes),
+                "reason": p.reason,
+                "predicted": bool(p.predicted),
+            }, cat="reconfig_audit")
+        return p
+
+    def _plan(
         self,
         layer: int,
         demand: np.ndarray | None = None,
@@ -478,10 +508,12 @@ class ControlPlane:
             overflow = max(0.0, self.fabric.cfg.reconfig_delay_s - hide_window)
             blocked = self.fabric.prepare(plan.demand, can_hide=overflow <= 0.0)
             self.reconfig_count += 1
+            metrics.counter("controlplane.reconfigs", mode="ocs").inc()
             return min(blocked, overflow)
         base = self.layer_perms[plan.layer]
         self.layer_perms[plan.layer] = plan.perm[base]
         self.reconfig_count += 1
+        metrics.counter("controlplane.reconfigs", mode="placement").inc()
         return 0.0
 
     def perm_stack(self) -> np.ndarray:
@@ -620,6 +652,7 @@ class PlacementApplier:
                 d_cur = self.wire_perm[p.layer]
                 self.wire_perm[p.layer] = d_cur[inverse_permutation(devp)]
                 self.wire_reconfig_count += 1
+                metrics.counter("placement.applies", mode="wire").inc()
                 continue
             inv = inverse_permutation(p.perm)
             if self.wire_perm is not None and (
@@ -635,6 +668,7 @@ class PlacementApplier:
                 self.wire_perm[p.layer] = np.arange(p_axis)
             inv_stack[p.layer] = inv
             gather_needed = True
+            metrics.counter("placement.applies", mode="weight_gather").inc()
         if gather_needed:
             params = permute_expert_weights(params, inv_stack, ev)
         for p in live:

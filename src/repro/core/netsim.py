@@ -37,6 +37,8 @@ from repro.core import commruntime as comm
 from repro.core import overlap
 from repro.core.controlplane import ControlPlane
 from repro.core.fabric import Fabric
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "SimModel",
@@ -403,6 +405,32 @@ def _stage_times(
     return timeline, a2a_total, blocked, exposed, kept_mean
 
 
+def _flush_ledger(scenario: str, **seconds_or_bytes) -> None:
+    """Fold a scenario's comm ledger into the process metrics registry as
+    ``netsim.<field>{scenario=...}`` counters (DESIGN.md §14)."""
+    reg = obs_metrics.default()
+    for field, v in seconds_or_bytes.items():
+        if v:
+            reg.counter(f"netsim.{field}", scenario=scenario).inc(float(v))
+
+
+def _traced_scenario(fn):
+    """Wrap a simulate_* entry point in a tracer span on the shared
+    ``netsim`` track (no-op when tracing is disabled)."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        tr = obs_trace.default()
+        if not tr.enabled:
+            return fn(*args, **kwargs)
+        with tr.span(f"netsim.{fn.__name__}", cat="netsim",
+                     tid=tr.track("netsim")):
+            return fn(*args, **kwargs)
+
+    return wrapper
+
+
 def simulate_iteration(
     model: SimModel,
     fabric: Fabric,
@@ -476,6 +504,14 @@ def simulate_iteration(
         link_bytes[stage.link_class] = (
             link_bytes.get(stage.link_class, 0.0) + getattr(lb, stage.link_class)
         )
+    _flush_ledger(
+        "training",
+        hidden_comm_s=stretch * (a2a - exposed),
+        exposed_comm_s=stretch * exposed,
+        pp_hidden_comm_s=pp_hidden,
+        dp_hidden_s=dp_hidden,
+        reconfig_blocked_s=blocked,
+    )
     return IterationResult(
         total=total,
         attn_compute=m * model.attention_time() * 3.0,
@@ -585,6 +621,7 @@ class ServingResult:
         return dataclasses.asdict(self)
 
 
+@_traced_scenario
 def simulate_serving(
     model: SimModel,
     fabric: Fabric,
@@ -918,6 +955,13 @@ def simulate_serving(
     )
     sim_seconds = max(clock, 1e-12)
     goodput = tokens_out / sim_seconds
+    _flush_ledger(
+        "serving",
+        a2a_s=a2a_total_s,
+        exposed_comm_s=exposed_total_s,
+        reconfig_blocked_s=blocked_total,
+        a2a_bytes=a2a_bytes_total,
+    )
     return ServingResult(
         fabric=fabric.name,
         ticks=ticks,
@@ -1008,6 +1052,7 @@ def _mix_demand(
     return dem
 
 
+@_traced_scenario
 def simulate_fleet(
     model: SimModel,
     *,
@@ -1388,6 +1433,12 @@ def simulate_fleet(
     # a property of the workload, not of the steering policy under test.
     goodput = tokens_out / max(busy_s, 1e-12)
     pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
+    _flush_ledger(
+        "fleet",
+        a2a_bytes=float(sum(a2a_bytes)),
+        cross_tier_bytes=cross_tier_bytes,
+        reconfig_blocked_s=blocked_total,
+    )
     return FleetServingResult(
         policy=policy,
         fabric=fabric_name,
@@ -1419,6 +1470,7 @@ def simulate_fleet(
     )
 
 
+@_traced_scenario
 def simulate_training(
     model: SimModel,
     fabric: Fabric,

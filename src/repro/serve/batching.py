@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.models import moe as moe_mod
 from repro.models import transformer as tfm
+from repro.obs import trace
 from repro.serve.paged import PageAllocator
 from repro.train.train_step import (
     make_draft_loop_step,
@@ -209,6 +210,11 @@ class ContinuousBatcher:
         self.sample_seed = int(sample_seed)
         self._base_key = jax.random.PRNGKey(self.sample_seed) if self.sample else None
         self.spec_k = int(spec_k)
+        # Measurement plane (DESIGN.md §14): the owning engine points
+        # ``trace_tid`` at its viewer track so batcher spans (prefill chunks,
+        # decode, spec draft/verify) land on the same timeline row.
+        self._tr = trace.default()
+        self.trace_tid: int | None = None
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
         self.t = np.zeros(slots, np.int32)  # next write position per slot
@@ -475,11 +481,13 @@ class ContinuousBatcher:
             return 0, None
         pf = self.prefilling[0]
         chunk = pf.req.prompt[pf.pos : pf.pos + self.prefill_chunk]
-        if self.paged:
-            self._apply_forks(
-                self.alloc.ensure(pf.slot, pf.pos, pf.pos + len(chunk))
-            )
-        next_tok, stats = self._run_chunk(pf.slot, np.asarray(chunk), pf.pos)
+        with self._tr.span("serve.prefill_chunk", tid=self.trace_tid,
+                           rid=pf.req.rid, tokens=len(chunk)):
+            if self.paged:
+                self._apply_forks(
+                    self.alloc.ensure(pf.slot, pf.pos, pf.pos + len(chunk))
+                )
+            next_tok, stats = self._run_chunk(pf.slot, np.asarray(chunk), pf.pos)
         pf.pos += len(chunk)
         load = None if stats is None else np.asarray(stats)
         if pf.pos >= len(pf.req.prompt):
@@ -547,17 +555,19 @@ class ContinuousBatcher:
             # exported MoE gate telemetry, and it suppresses K/V writes for
             # dead slots — without it the decode step would stomp a stale
             # position of a slot that is empty or still mid-chunked-prefill.
-            next_tok, self.caches, stats = self._step(
-                self.params,
-                self.caches,
-                jnp.asarray(self.tokens),
-                jnp.asarray(self.t),
-                rng,
-                perm,
-                wire,
-                jnp.asarray(live_mask),
-                page_table,
-            )
+            with self._tr.span("serve.decode", tid=self.trace_tid,
+                               live=len(live)):
+                next_tok, self.caches, stats = self._step(
+                    self.params,
+                    self.caches,
+                    jnp.asarray(self.tokens),
+                    jnp.asarray(self.t),
+                    rng,
+                    perm,
+                    wire,
+                    jnp.asarray(live_mask),
+                    page_table,
+                )
             if stats is not None:
                 gate_load = np.asarray(stats)
             next_np = np.asarray(next_tok)
@@ -647,30 +657,34 @@ class ContinuousBatcher:
                     donate_argnums=(1,),
                 )
                 self._draft_fns[k] = draft_fn
-            drafts, self.caches = draft_fn(
-                self.params,
-                self.caches,
-                jnp.asarray(self.tokens),
-                t_vec,
-                None if span_keys is None else span_keys[:, :k],
-                perm,
-                wire,
-                jnp.asarray(live_mask[:, :1]),
-                page_table,
-            )
+            with self._tr.span("serve.spec_draft", tid=self.trace_tid,
+                               k=k, live=len(live)):
+                drafts, self.caches = draft_fn(
+                    self.params,
+                    self.caches,
+                    jnp.asarray(self.tokens),
+                    t_vec,
+                    None if span_keys is None else span_keys[:, :k],
+                    perm,
+                    wire,
+                    jnp.asarray(live_mask[:, :1]),
+                    page_table,
+                )
             draft_np = np.asarray(drafts)
             tokens[:, 1:] = draft_np
-        toks, self.caches, stats = self._verify_fn(
-            self.params,
-            self.caches,
-            jnp.asarray(tokens),
-            t_vec,
-            span_keys,
-            perm,
-            wire,
-            jnp.asarray(live_mask),
-            page_table,
-        )
+        with self._tr.span("serve.spec_verify", tid=self.trace_tid,
+                           span=c, live=len(live)):
+            toks, self.caches, stats = self._verify_fn(
+                self.params,
+                self.caches,
+                jnp.asarray(tokens),
+                t_vec,
+                span_keys,
+                perm,
+                wire,
+                jnp.asarray(live_mask),
+                page_table,
+            )
         gate_load = None if stats is None else np.asarray(stats)
         v = np.asarray(toks)
         finished = 0

@@ -37,7 +37,10 @@ import numpy as np
 from repro.core import commruntime as comm
 from repro.core.controlplane import ControlPlane, LayerPlan, PlacementApplier
 from repro.models import routing
+from repro.obs import metrics, trace
+from repro.obs.traffic import TrafficObservatory
 from repro.parallel.sharding import ShardingPlan, virtual_experts
+from repro.serve import events as sev
 from repro.serve.batching import ContinuousBatcher, Request, TickStats
 from repro.serve.workload import SyntheticRequest, WorkloadGenerator
 from repro.train import checkpoint as ckpt
@@ -145,6 +148,7 @@ class ServeEngine:
         scfg: ServeConfig | None = None,
         *,
         mesh=None,
+        name: str | None = None,
     ):
         self.cfg = cfg
         self.plan = plan
@@ -203,8 +207,35 @@ class ServeEngine:
         self.tick_log: list[TickStats] = []
         # Fleet/lifecycle state (DESIGN.md §12).
         self.draining = False
-        self.decision_log: list[dict] = []
+        self.decisions: list[sev.DecisionEvent] = []
         self._resident_mix: np.ndarray | None = None  # [L, E] EWMA gate mix
+        # Measurement plane (DESIGN.md §14): the process tracer, this
+        # engine's viewer track (lazy — fleet renames replicas before the
+        # first tick), cached metric children, and the §3 observatory fed
+        # every observed tick's gate load through the live perm stack.
+        self.name = name or "serve"
+        self._tr = trace.default()
+        self._tid: int | None = None
+        self._kv_last: tuple | None = None
+        _m = metrics.default()
+        self._m_ticks = _m.counter("serve.ticks")
+        self._m_tokens = _m.counter("serve.tokens_served")
+        self._m_a2a = _m.counter("serve.a2a_bytes")
+        self.observatory = (
+            TrafficObservatory(
+                cfg.pattern_repeats,
+                cfg.moe.num_experts,
+                num_devices=(
+                    self.controlplane.num_devices if self.controlplane else 1
+                ),
+                replication=(
+                    self.controlplane.replication if self.controlplane else 1
+                ),
+                num_regions=s.num_regions,
+            )
+            if cfg.is_moe
+            else None
+        )
 
     # -- request intake -------------------------------------------------------
     @property
@@ -214,6 +245,31 @@ class ServeEngine:
     @property
     def tick(self) -> int:
         return self.batcher.tick
+
+    # -- measurement plane (DESIGN.md §14) ------------------------------------
+    @property
+    def decision_log(self) -> list[dict]:
+        """Backward-compat dict view of the typed ``decisions`` journal —
+        same keys, same order as the legacy raw-dict log."""
+        return [e.as_dict() for e in self.decisions]
+
+    def _track_id(self) -> int:
+        if self._tid is None:
+            self._tid = self._tr.track(self.name)
+            # Batcher spans (prefill/decode/spec) share this engine's row.
+            self.batcher.trace_tid = self._tid
+        return self._tid
+
+    def _decide(self, ev: sev.DecisionEvent) -> None:
+        """Journal a typed lifecycle decision and mirror it onto the trace
+        as a structured audit event."""
+        self.decisions.append(ev)
+        metrics.counter("serve.decisions", kind=ev.kind).inc()
+        if self._tr.enabled:
+            self._tr.audit(
+                f"serve.{ev.kind}", ev.as_dict(), cat="decision",
+                tid=self._track_id(),
+            )
 
     def submit(self, req: Request) -> None:
         if self.draining:
@@ -232,15 +288,13 @@ class ServeEngine:
         self.batcher.queue.clear()
         for r in handed:
             r.submit_tick = -1
-        self.decision_log.append(
-            {"tick": self.tick, "kind": "drain", "handed_back": len(handed)}
-        )
+        self._decide(sev.DrainDecision(tick=self.tick, handed_back=len(handed)))
         return handed
 
     def restore(self) -> None:
         """Re-open admissions after a drain."""
         self.draining = False
-        self.decision_log.append({"tick": self.tick, "kind": "restore"})
+        self._decide(sev.RestoreDecision(tick=self.tick))
 
     def unfinished_requests(self) -> list[Request]:
         """Every admitted-but-unfinished request (queued, prefilling or
@@ -265,10 +319,20 @@ class ServeEngine:
                 norm if self._resident_mix is None
                 else 0.8 * self._resident_mix + 0.2 * norm
             )
+        regions = self.live_region_weights()
+        if self.observatory is not None:
+            # §3 observatory: fold the tick's realized gate load through the
+            # CURRENT perm stack so the expert→device matrix reflects the
+            # placement actually serving it (DESIGN.md §14).
+            self.observatory.record(
+                load,
+                self.controlplane.perm_stack() if self.controlplane else None,
+                regions,
+            )
         if self.controlplane is not None:
             for layer in range(load.shape[0]):
                 self.controlplane.observe(layer, load[layer])
-            self.controlplane.observe_regions(self.live_region_weights(), load)
+            self.controlplane.observe_regions(regions, load)
             self.controlplane.end_step()
 
     # -- exported gate statistics (fleet steering inputs, DESIGN.md §12) ------
@@ -341,22 +405,51 @@ class ServeEngine:
         if (cp is None or not self.scfg.reconfig_every or self.tick == 0
                 or self.tick % self.scfg.reconfig_every):
             return
-        plans = [cp.plan(layer) for layer in range(cp.num_layers)]
-        applied = self.apply_plans(plans)
-        self.decision_log.append({
-            "tick": self.tick,
-            "kind": "reconfig",
-            "applied": applied,
-            "layers": [p.layer for p in plans if p.reconfigure],
-            "gain_bytes": float(sum(p.gain_bytes for p in plans
-                                    if p.reconfigure)),
-            "reasons": sorted({p.reason for p in plans}),
-        })
+        with self._tr.span("serve.reconfig", tid=self._track_id(),
+                           tick=self.tick) as sp:
+            plans = [cp.plan(layer) for layer in range(cp.num_layers)]
+            applied = self.apply_plans(plans)
+            sp.set(applied=applied)
+        self._decide(sev.ReconfigDecision(
+            tick=self.tick,
+            applied=applied,
+            layers=[p.layer for p in plans if p.reconfigure],
+            gain_bytes=float(sum(p.gain_bytes for p in plans
+                                 if p.reconfigure)),
+            reasons=sorted({p.reason for p in plans}),
+        ))
 
     def step(self) -> TickStats:
         """One engine tick: decode + interleaved prefill chunk, stream the
         realized gate loads into the control plane, and (on cadence) apply
         placement plans before the next tick."""
+        tr = self._tr
+        if not tr.enabled:
+            return self._step_inner()
+        tid = self._track_id()
+        with tr.span("serve.tick", tid=tid, tick=self.tick) as sp:
+            stats = self._step_inner()
+            sp.set(live=stats.live, prefill_tokens=stats.prefill_tokens,
+                   admitted=stats.admitted, finished=stats.finished)
+        tr.counter("serve.a2a_bytes", self.a2a_bytes, tid=tid)
+        if self.batcher.paged:
+            alloc = self.batcher.alloc
+            kv = (alloc.resident_pages(), alloc.prefix_hit_pages,
+                  alloc.evictions, alloc.cow_forks)
+            # Counters render as step functions — only emit on change, so
+            # steady-state decode ticks pay one less event.
+            if kv != self._kv_last:
+                self._kv_last = kv
+                tr.counter("serve.kv", {
+                    "resident_pages": float(kv[0]),
+                    "prefix_hit_pages": float(kv[1]),
+                    "evictions": float(kv[2]),
+                    "cow_forks": float(kv[3]),
+                }, tid=tid)
+        return stats
+
+    def _step_inner(self) -> TickStats:
+        a2a0 = self.a2a_bytes
         stats = self.batcher.step()
         # Full-model routed positions: one per live slot on plain ticks, the
         # whole verify span on speculative ticks (the a2a launch amortizes
@@ -372,6 +465,9 @@ class ServeEngine:
                 stats.spec_drafted, self._draft_top_k, self.cfg.d_model,
                 self._dtype_bytes,
             )
+        self._m_ticks.inc()
+        self._m_tokens.inc(served)
+        self._m_a2a.inc(self.a2a_bytes - a2a0)
         self._observe(stats)
         self._maybe_reconfigure()
         self.tick_log.append(stats)
@@ -440,6 +536,15 @@ class ServeEngine:
         tokens_out = sum(len(r.out) for r in ok)
         pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
         ts = self.scfg.tick_s
+        if (self._tr.enabled and self.observatory is not None
+                and self.observatory.ticks):
+            # The run's §3 study rides the trace as ONE typed event —
+            # scripts/measure_run.py rebuilds the observatory from it.
+            self._tr.audit(
+                "traffic.report",
+                {"scope": self.name, "report": self.observatory.report()},
+                cat="traffic", tid=self._track_id(),
+            )
         return ServeReport(
             requests=len(done),
             completed=len(ok),

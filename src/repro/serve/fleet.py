@@ -61,6 +61,9 @@ import math
 import numpy as np
 
 from repro.core.controlplane import RegionGateStats
+from repro.obs import metrics, trace
+from repro.obs.traffic import TrafficObservatory
+from repro.serve import events as sev
 from repro.serve.batching import Request
 from repro.serve.engine import ServeEngine, ServeReport
 from repro.serve.workload import (
@@ -206,7 +209,15 @@ class FleetEngine:
             raise ValueError(f"unknown steering policy {self.fcfg.policy!r}")
         self.alive = [True] * len(engines)
         self.tick = 0
-        self.decision_log: list[dict] = []
+        self.decisions: list[sev.DecisionEvent] = []
+        # Measurement plane (DESIGN.md §14): every replica gets its own
+        # viewer track so the merged trace shows one row per replica plus
+        # one for fleet-level steering/lifecycle decisions.
+        self._tr = trace.default()
+        self._tid: int | None = None
+        for j, e in enumerate(engines):
+            if e.name == "serve":  # default name -> stable replica track
+                e.name = f"replica{j}"
         self._queue: list[tuple[int, float, int, FleetRequest]] = []
         self._seq = 0
         self._rr = 0
@@ -219,6 +230,26 @@ class FleetEngine:
         self._polled: list[int] = [0] * len(engines)  # finished-list cursors
         self._steer_reasons: dict[str, int] = {}
         self.reconfig_events = 0
+
+    # -- measurement plane (DESIGN.md §14) ------------------------------------
+    @property
+    def decision_log(self) -> list[dict]:
+        """Backward-compat dict view of the typed ``decisions`` journal."""
+        return [e.as_dict() for e in self.decisions]
+
+    def _track_id(self) -> int:
+        if self._tid is None:
+            self._tid = self._tr.track("fleet")
+        return self._tid
+
+    def _decide(self, ev: sev.DecisionEvent) -> None:
+        self.decisions.append(ev)
+        metrics.counter("fleet.decisions", kind=ev.kind).inc()
+        if self._tr.enabled:
+            self._tr.audit(
+                f"fleet.{ev.kind}", ev.as_dict(), cat="decision",
+                tid=self._track_id(),
+            )
 
     # -- intake ---------------------------------------------------------------
     def submit(self, freq: FleetRequest) -> None:
@@ -237,17 +268,14 @@ class FleetEngine:
         for r in handed:
             self.assignment.pop(r.rid, None)
             self.submit(self.records[r.rid])
-        self.decision_log.append(
-            {"tick": self.tick, "kind": "drain", "replica": j,
-             "resteered": len(handed)}
-        )
+        self._decide(sev.FleetDrainDecision(
+            tick=self.tick, replica=j, resteered=len(handed)
+        ))
         return len(handed)
 
     def restore_replica(self, j: int) -> None:
         self.engines[j].restore()
-        self.decision_log.append(
-            {"tick": self.tick, "kind": "restore", "replica": j}
-        )
+        self._decide(sev.FleetRestoreDecision(tick=self.tick, replica=j))
 
     def fail_replica(self, j: int) -> int:
         """Hard failure: everything unfinished on ``j`` (including partially
@@ -260,10 +288,9 @@ class FleetEngine:
         for r in lost:
             self.assignment.pop(r.rid, None)
             self.submit(self.records[r.rid])
-        self.decision_log.append(
-            {"tick": self.tick, "kind": "fail", "replica": j,
-             "resteered": len(lost)}
-        )
+        self._decide(sev.FleetFailDecision(
+            tick=self.tick, replica=j, resteered=len(lost)
+        ))
         return len(lost)
 
     # -- steering -------------------------------------------------------------
@@ -356,11 +383,10 @@ class FleetEngine:
                 eos_id=freq.eos_id,
                 region=freq.region,
             ))
-            self.decision_log.append({
-                "tick": self.tick, "kind": "steer", "rid": freq.rid,
-                "region": freq.region, "slo": freq.slo.name,
-                "replica": j, "reason": reason,
-            })
+            self._decide(sev.SteerDecision(
+                tick=self.tick, rid=freq.rid, region=freq.region,
+                slo=freq.slo.name, replica=j, reason=reason,
+            ))
 
     # -- steer-vs-reconfigure (fleet cadence) ---------------------------------
     def _maybe_reconfigure(self) -> None:
@@ -384,13 +410,13 @@ class FleetEngine:
                 continue
             e.apply_plans(plans)
             self.reconfig_events += 1
-            self.decision_log.append({
-                "tick": self.tick, "kind": "reconfig", "replica": j,
-                "layers": [p.layer for p in plans if p.reconfigure],
-                "gain_bytes": float(sum(
+            self._decide(sev.FleetReconfigDecision(
+                tick=self.tick, replica=j,
+                layers=[p.layer for p in plans if p.reconfigure],
+                gain_bytes=float(sum(
                     p.gain_bytes for p in plans if p.reconfigure
                 )),
-            })
+            ))
 
     # -- progress tracking ----------------------------------------------------
     def _poll(self, j: int) -> None:
@@ -416,14 +442,17 @@ class FleetEngine:
     def step(self) -> None:
         """One fleet tick: dispatch from the global queue, tick every busy
         replica, poll completions, run the fleet-cadence reconfigure check."""
-        self._dispatch()
-        for j, e in enumerate(self.engines):
-            if not self.alive[j]:
-                continue  # failed replicas were polled once at failure time
-            if e.batcher.busy:
-                e.step()
-            self._poll(j)
-        self._maybe_reconfigure()
+        metrics.counter("fleet.ticks").inc()
+        tid = self._track_id() if self._tr.enabled else None
+        with self._tr.span("fleet.tick", tid=tid, tick=self.tick):
+            self._dispatch()
+            for j, e in enumerate(self.engines):
+                if not self.alive[j]:
+                    continue  # failed replicas were polled once at failure
+                if e.batcher.busy:
+                    e.step()
+                self._poll(j)
+            self._maybe_reconfigure()
         self.tick += 1
 
     # -- driving a workload ---------------------------------------------------
@@ -480,7 +509,26 @@ class FleetEngine:
             self.step()
         return self.report()
 
+    def observatory(self):
+        """Fleet-wide §3 observatory: the replicas' matrices summed (the
+        per-replica matrices stay available on each engine)."""
+        merged = None
+        for e in self.engines:
+            if e.observatory is None or not e.observatory.ticks:
+                continue
+            if merged is None:
+                merged = TrafficObservatory.from_report(e.observatory.report())
+            else:
+                merged.merge(e.observatory)
+        return merged
+
     def report(self) -> FleetReport:
+        obs = self.observatory()
+        if self._tr.enabled and obs is not None:
+            self._tr.audit(
+                "traffic.report", {"scope": "fleet", "report": obs.report()},
+                cat="traffic", tid=self._track_id(),
+            )
         ok = list(self._done.values())
         ttft = np.array(
             [

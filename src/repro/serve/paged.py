@@ -30,6 +30,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.obs import metrics
+
 __all__ = ["AdmitPlan", "PageAllocator"]
 
 
@@ -69,13 +71,21 @@ class PageAllocator:
         self._page_hash: dict[int, int] = {}  # page id -> its registry hash
         self._lru: OrderedDict[int, None] = OrderedDict()  # hashes, oldest first
         self._reserved = np.zeros(slots, np.int64)
-        # telemetry
+        # telemetry — the local ints stay (per-allocator reports); the
+        # registry children mirror them process-wide (DESIGN.md §14)
         self.prefix_hit_pages = 0
         self.cow_forks = 0
         self.evictions = 0
         self.allocs = 0
         self.draft_truncations = 0
         self.pages_reclaimed = 0
+        _m = metrics.default()
+        self._m_prefix_hits = _m.counter("kv.prefix_hit_pages")
+        self._m_cow = _m.counter("kv.cow_forks")
+        self._m_evict = _m.counter("kv.evictions")
+        self._m_alloc = _m.counter("kv.allocs")
+        self._m_trunc = _m.counter("kv.draft_truncations")
+        self._m_reclaim = _m.counter("kv.pages_reclaimed")
 
     # -- capacity --------------------------------------------------------
 
@@ -99,6 +109,7 @@ class PageAllocator:
     def _alloc(self) -> int:
         if self._free:
             self.allocs += 1
+            self._m_alloc.inc()
             return self._free.pop()
         for h in list(self._lru):  # oldest first
             pid = self._registry[h]
@@ -109,6 +120,8 @@ class PageAllocator:
                 self.refcount[pid] = 0
                 self.evictions += 1
                 self.allocs += 1
+                self._m_evict.inc()
+                self._m_alloc.inc()
                 return pid
         raise RuntimeError(
             "page pool exhausted despite reservations (allocator bug)"
@@ -170,6 +183,7 @@ class PageAllocator:
             return None
         self._reserved[slot] = need
         self.prefix_hit_pages += len(reused)
+        self._m_prefix_hits.inc(len(reused))
         return AdmitPlan(
             reuse_len=reuse_len,
             start=min(reuse_len, prompt_len - 1),
@@ -197,6 +211,7 @@ class PageAllocator:
                 self.table[slot, j] = npid
                 forks.append((pid, npid))
                 self.cow_forks += 1
+                self._m_cow.inc()
             else:
                 continue
             if self._reserved[slot] > 0:
@@ -260,6 +275,8 @@ class PageAllocator:
                 freed += 1
         self.draft_truncations += 1
         self.pages_reclaimed += freed
+        self._m_trunc.inc()
+        self._m_reclaim.inc(freed)
         return freed
 
     # -- state round-trip (drain checkpoints, DESIGN.md §12) -------------

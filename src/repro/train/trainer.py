@@ -31,6 +31,7 @@ from repro.core.controlplane import (
     PlacementApplier,
     permute_expert_weights,
 )
+from repro.obs import metrics, trace
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import ShardingPlan, virtual_experts
@@ -75,8 +76,9 @@ class TrainerConfig:
     # set and the key is present in the cache file, the trainer replaces the
     # constant comm knobs (MoE overlap_chunks / dispatch mode, dp_compress
     # where the mesh allows) with the tuned winners before building the
-    # step.  A cache miss is silently a no-op — tuning is done offline by
-    # the benchmark/netsim side, which shares the same cache file.
+    # step.  A cache miss keeps the configured constants and is surfaced as
+    # a one-line warning plus an ``autotune.cache_miss`` counter — tuning is
+    # done offline by the benchmark/netsim side, which shares the cache file.
     autotune_cache: str = ""
     autotune_key: str = ""
     # Straggler watchdog: warn when a step exceeds ema * factor.
@@ -100,6 +102,12 @@ class Trainer:
             tuned = autotune.load_cached(tcfg.autotune_cache, tcfg.autotune_key)
             if tuned is not None:
                 cfg, tcfg = autotune.apply_to_trainer(cfg, tcfg, tuned)
+            else:
+                metrics.counter("autotune.cache_miss").inc()
+                print(
+                    f"[trainer] autotune cache miss: key {tcfg.autotune_key!r} "
+                    f"not in {tcfg.autotune_cache} — using configured constants"
+                )
         self.cfg = cfg
         self.opt_cfg = opt_cfg
         self.tcfg = tcfg
@@ -133,6 +141,13 @@ class Trainer:
         self.metrics_log: list[dict] = []
         self._ema_step_time: float | None = None
         self.straggler_events = 0
+        self._tr = trace.default()
+        self._tid: int | None = None
+        _m = metrics.default()
+        self._m_steps = _m.counter("train.steps")
+        self._m_tokens = _m.counter("train.tokens")
+        self._m_stragglers = _m.counter("train.stragglers")
+        self._m_step_time = _m.histogram("train.step_time_s")
 
         # MixNet control plane (only meaningful for MoE archs).
         self.controlplane: ControlPlane | None = None
@@ -201,6 +216,12 @@ class Trainer:
                 extra=extra,
             )
 
+    # -- observability ---------------------------------------------------------
+    def _track_id(self) -> int:
+        if self._tid is None:
+            self._tid = self._tr.track("trainer")
+        return self._tid
+
     # -- MixNet reconfiguration ------------------------------------------------
     def _wire_capable(self) -> bool:
         """Wire re-addressing needs the mixnet data plane and a control-plane
@@ -228,7 +249,15 @@ class Trainer:
         ap = self._applier
         # Re-evaluated per call: tests toggle _wire_capable on the instance.
         ap.wire_capable = self._wire_capable()
-        self.params, changed = ap.apply(self.params, plans)
+        tid = self._track_id() if self._tr.enabled else None
+        with self._tr.span(
+            "train.reconfig", tid=tid, cat="reconfig", step=self.step
+        ) as sp:
+            self.params, changed = ap.apply(self.params, plans)
+            sp.set(
+                applied=bool(changed),
+                plans=sum(1 for p in plans if p.reconfigure),
+            )
         if changed:
             self.expert_perm = self.controlplane.perm_stack()
             self.reconfig_count = self.controlplane.reconfig_count
@@ -283,36 +312,52 @@ class Trainer:
                 if self.wire_perm is not None
                 else None
             )
+            tid = self._track_id() if self._tr.enabled else None
             t0 = time.perf_counter()
-            if self.tcfg.dp_compress:
-                self.params, self.opt_state, metrics, self.ef_residual = (
-                    self.step_fn(
-                        self.params, self.opt_state, batch, perm, wire,
-                        self.ef_residual,
+            with self._tr.span(
+                "train.step", tid=tid, cat="train", step=self.step + 1
+            ) as sp:
+                if self.tcfg.dp_compress:
+                    self.params, self.opt_state, step_metrics, self.ef_residual = (
+                        self.step_fn(
+                            self.params, self.opt_state, batch, perm, wire,
+                            self.ef_residual,
+                        )
                     )
-                )
-            else:
-                self.params, self.opt_state, metrics = self.step_fn(
-                    self.params, self.opt_state, batch, perm, wire
-                )
-            metrics = {
-                k: np.asarray(v) for k, v in metrics.items()
-            }
+                else:
+                    self.params, self.opt_state, step_metrics = self.step_fn(
+                        self.params, self.opt_state, batch, perm, wire
+                    )
+                step_metrics = {
+                    k: np.asarray(v) for k, v in step_metrics.items()
+                }
+                sp.set(loss=float(step_metrics.get("loss", 0.0)))
             dt = time.perf_counter() - t0
+            self._m_steps.inc()
+            self._m_tokens.inc(float(batch_np.tokens.size))
+            self._m_step_time.observe(dt)
+            if self._tr.enabled:
+                self._tr.counter("train.step_time_s", dt, tid=tid)
             # Straggler watchdog (mitigation = flag + report; a real cluster
             # deployment feeds this to the job scheduler for hot-sparing).
             if self._ema_step_time is not None and dt > t.straggler_factor * self._ema_step_time:
                 self.straggler_events += 1
+                self._m_stragglers.inc()
+                if self._tr.enabled:
+                    self._tr.instant(
+                        "train.straggler", tid=tid, cat="train",
+                        step=self.step + 1, dt_s=dt, ema_s=self._ema_step_time,
+                    )
             self._ema_step_time = (
                 dt if self._ema_step_time is None else 0.9 * self._ema_step_time + 0.1 * dt
             )
             self.step += 1
-            metrics["step"] = self.step
-            metrics["step_time_s"] = dt
-            self.metrics_log.append(metrics)
+            step_metrics["step"] = self.step
+            step_metrics["step_time_s"] = dt
+            self.metrics_log.append(step_metrics)
 
-            if self.controlplane is not None and "expert_load" in metrics:
-                self._reconfigure_step(np.asarray(metrics["expert_load"]))
+            if self.controlplane is not None and "expert_load" in step_metrics:
+                self._reconfigure_step(np.asarray(step_metrics["expert_load"]))
             if t.ckpt_every and self.step % t.ckpt_every == 0:
                 self._checkpoint()
         ckpt.wait_pending()
